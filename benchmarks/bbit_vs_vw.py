@@ -1,0 +1,55 @@
+"""Paper Figures 10-12: b-bit minwise hashing vs VW at equal storage.
+
+Claim: at the same per-example storage budget, b-bit minwise hashing is
+substantially more accurate than VW (VW needs ~10-100x more storage for
+parity); at equal k, 8-bit hashing also trains faster than VW's denser
+vectors.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import (Row, bench_dataset, train_dense_accuracy,
+                               train_svm_accuracy)
+from repro.core import Hash2U, VWHasher, lowest_bits, minhash_signatures
+from repro.core.bbit import storage_bits, vw_storage_bits
+
+D_BITS = 22
+
+
+def run() -> list[Row]:
+    train, test = bench_dataset(n=512, D=2**D_BITS, avg_nnz=192, seed=5)
+    rows: list[Row] = []
+    b = 8
+    for k in (32, 128):
+        # b-bit minwise at k*b bits/example
+        fam = Hash2U.create(jax.random.PRNGKey(k), k, D_BITS)
+        s_tr = lowest_bits(minhash_signatures(train.indices, train.mask,
+                                              fam), b)
+        s_te = lowest_bits(minhash_signatures(test.indices, test.mask,
+                                              fam), b)
+        t0 = time.perf_counter()
+        acc_bbit = train_svm_accuracy(s_tr, train.labels, s_te, test.labels,
+                                      k, b)
+        t_bbit = (time.perf_counter() - t0) * 1e6
+        bits = storage_bits(k, b)
+
+        # VW with the same number of hashed values (k bins) -- the paper's
+        # equal-k comparison (VW stores counts, i.e. more bits per value)
+        m_bits = max(2, (k - 1).bit_length())
+        vw = VWHasher.create(jax.random.PRNGKey(k + 1), m_bits, mode="u2")
+        x_tr, x_te = vw(train.indices, train.mask), vw(test.indices,
+                                                       test.mask)
+        t0 = time.perf_counter()
+        acc_vw = train_dense_accuracy(x_tr, train.labels, x_te, test.labels)
+        t_vw = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig10_12/k{k}", 0.0, {
+            "acc_bbit": round(acc_bbit, 4), "acc_vw": round(acc_vw, 4),
+            "bbit_bits_per_ex": bits,
+            "vw_bits_per_ex": vw_storage_bits(1 << m_bits),
+            "train_us_bbit": round(t_bbit, 0),
+            "train_us_vw": round(t_vw, 0)}))
+    return rows

@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: timing, CSV rows, small dataset cache."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, Dict]   # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (blocking on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    lines = ["name,us_per_call,derived"]
+    for name, us, derived in rows:
+        dv = ";".join(f"{k}={v}" for k, v in derived.items())
+        lines.append(f"{name},{us:.1f},{dv}")
+    return "\n".join(lines)
+
+
+_CACHE = {}
+
+
+def bench_dataset(n: int = 512, D: int = 2**20, avg_nnz: int = 256,
+                  seed: int = 0):
+    """Small webspam-like dataset (cached across benchmark modules)."""
+    key = (n, D, avg_nnz, seed)
+    if key not in _CACHE:
+        from repro.data.synthetic import DatasetSpec, generate
+        spec = DatasetSpec("bench", n=n, D=D, avg_nnz=avg_nnz,
+                           n_prototypes=4, overlap=0.7, seed=seed)
+        _CACHE[key] = generate(spec)
+    return _CACHE[key]
+
+
+def train_svm_accuracy(sig_tr, y_tr, sig_te, y_te, k: int, b: int,
+                       steps: int = 80, lr: float = 0.05) -> float:
+    """Quick batch SVM on hashed features; returns test accuracy."""
+    from repro.models.linear import LinearModel, accuracy, make_loss_fn
+    from repro.optim import adamw, constant
+    from repro.train import TrainState, make_train_step
+    loss = make_loss_fn("svm", "hashed", b, C=1.0)
+    opt = adamw(constant(lr))
+    state = TrainState.create(LinearModel.create(k * (1 << b)), opt)
+    step = jax.jit(make_train_step(lambda p, batch: loss(p, *batch), opt))
+    for _ in range(steps):
+        state, _ = step(state, (sig_tr, y_tr))
+    return float(accuracy(state.params, sig_te, y_te,
+                          feature_kind="hashed", b=b))
+
+
+def train_dense_accuracy(x_tr, y_tr, x_te, y_te, steps: int = 80,
+                         lr: float = 0.05, kind: str = "svm") -> float:
+    from repro.models.linear import LinearModel, accuracy, make_loss_fn
+    from repro.optim import adamw, constant
+    from repro.train import TrainState, make_train_step
+    loss = make_loss_fn(kind, "dense", 0, C=1.0)
+    opt = adamw(constant(lr))
+    state = TrainState.create(LinearModel.create(x_tr.shape[1]), opt)
+    step = jax.jit(make_train_step(lambda p, batch: loss(p, *batch), opt))
+    for _ in range(steps):
+        state, _ = step(state, (x_tr, y_tr))
+    return float(accuracy(state.params, x_te, y_te, feature_kind="dense"))

@@ -1,0 +1,41 @@
+"""Paper Figure 4: SVM accuracy -- permutations vs 2U vs 4U across (k, b).
+
+Paper claim: for k >= ~200, b >= 4 the three hashing schemes are
+indistinguishable; 4U slightly better than 2U only at b=1 / tiny k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, bench_dataset, train_svm_accuracy
+from repro.core import (Hash2U, Hash4U, PermutationFamily, lowest_bits,
+                        minhash_signatures)
+
+D_BITS = 18
+
+
+def run() -> list[Row]:
+    train, test = bench_dataset(n=512, D=2**D_BITS, avg_nnz=128)
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(1)
+    for k in (32, 128):
+        for b in (1, 4, 8):
+            accs = {}
+            for name, fam in [
+                ("perm", PermutationFamily.create(key, k, 2**D_BITS)),
+                ("2u", Hash2U.create(key, k, D_BITS)),
+                ("4u", Hash4U.create(key, k, D_BITS)),
+            ]:
+                s_tr = lowest_bits(
+                    minhash_signatures(train.indices, train.mask, fam), b)
+                s_te = lowest_bits(
+                    minhash_signatures(test.indices, test.mask, fam), b)
+                accs[name] = train_svm_accuracy(
+                    s_tr, train.labels, s_te, test.labels, k, b)
+            spread = max(accs.values()) - min(accs.values())
+            rows.append((f"fig4/k{k}_b{b}", 0.0, {
+                **{f"acc_{n}": round(a, 4) for n, a in accs.items()},
+                "spread": round(spread, 4)}))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Figures 6-9: accuracy and train time vs (k, b) on the rcv1-like
+(large-D) dataset, SVM + logistic.
+
+Paper claim: k=30, b=12 already >90%; k >= 300 reaches >95%; training
+time grows mildly with k*2^b.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import Row, bench_dataset, train_svm_accuracy
+from repro.core import Hash2U, lowest_bits, minhash_signatures
+
+D_BITS = 26    # large-D regime (rcv1-like, far beyond permutation storage)
+
+
+def run() -> list[Row]:
+    train, test = bench_dataset(n=512, D=2**D_BITS, avg_nnz=256, seed=3)
+    rows: list[Row] = []
+    for k in (16, 64, 256):
+        for b in (4, 8, 12):
+            fam = Hash2U.create(jax.random.PRNGKey(k + b), k, D_BITS)
+            s_tr = lowest_bits(
+                minhash_signatures(train.indices, train.mask, fam), b)
+            s_te = lowest_bits(
+                minhash_signatures(test.indices, test.mask, fam), b)
+            t0 = time.perf_counter()
+            acc = train_svm_accuracy(s_tr, train.labels, s_te, test.labels,
+                                     k, b)
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig6_9/k{k}_b{b}", dt, {
+                "acc": round(acc, 4), "model_dims": k * (1 << b)}))
+    return rows

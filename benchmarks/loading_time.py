@@ -1,0 +1,86 @@
+"""Paper Figures 16, 18 + Table 4: per-epoch loading + training time,
+original vs b-bit hashed data.
+
+Claim (Table 4): training on the original data costs ~10x (webspam) /
+~29x (rcv1) the hashed-data cost, and loading dominates -- the whole
+point of using b-bit hashing for online learning.  We measure real disk
+round-trips per epoch for both representations (binary format both, per
+the paper's methodology note).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, bench_dataset
+from repro.core import Hash2U, lowest_bits, minhash_signatures
+from repro.models.linear import sgd_svm_init, sgd_svm_step
+from repro.train import online_epochs
+
+D_BITS = 20
+K, B = 128, 8
+
+
+def run() -> list[Row]:
+    train, _ = bench_dataset(n=512, D=2**D_BITS, avg_nnz=256, seed=9)
+    fam = Hash2U.create(jax.random.PRNGKey(0), K, D_BITS)
+    sig = np.asarray(lowest_bits(
+        minhash_signatures(train.indices, train.mask, fam), B), np.uint8)
+    labels = np.asarray(train.labels)
+
+    tmp = tempfile.mkdtemp(prefix="repro_loading_")
+    orig_path = os.path.join(tmp, "orig.npz")
+    idx = np.asarray(train.indices)
+    msk = np.asarray(train.mask)
+    np.savez(orig_path, indices=idx, mask=msk, labels=labels)
+    hash_path = os.path.join(tmp, "hashed.npz")
+    np.savez(hash_path, sig=sig, labels=labels)
+
+    size_orig = os.path.getsize(orig_path)
+    size_hash = os.path.getsize(hash_path)
+
+    step = jax.jit(functools.partial(sgd_svm_step, lam=1e-4, eta0=0.5, b=B))
+    st = sgd_svm_init(K * (1 << B))
+
+    def hashed_epoch_batches():
+        with np.load(hash_path) as z:       # loaded from disk every epoch
+            s, y = z["sig"], z["labels"]
+        for i in range(0, len(y), 64):
+            yield (jax.numpy.asarray(s[i:i + 64], jax.numpy.uint32),
+                   jax.numpy.asarray(y[i:i + 64]))
+
+    st, times_h, _ = online_epochs(
+        lambda state, batch: step(state, batch[0], batch[1]),
+        st, hashed_epoch_batches, 3)
+
+    def epoch_load(path, keys):
+        t0 = time.perf_counter()
+        with np.load(path) as z:
+            arrs = [np.array(z[k]) for k in keys]   # force full read
+        return time.perf_counter() - t0
+
+    load_orig_s = float(np.median(
+        [epoch_load(orig_path, ("indices", "mask", "labels"))
+         for _ in range(5)]))
+    load_hash_s = float(np.median(
+        [epoch_load(hash_path, ("sig", "labels")) for _ in range(5)]))
+
+    return [
+        ("table4/storage", 0.0, {
+            "orig_bytes": size_orig, "hashed_bytes": size_hash,
+            "reduction_x": round(size_orig / size_hash, 1)}),
+        ("table4/loading", 0.0, {
+            "orig_epoch_s": round(load_orig_s, 4),
+            "hashed_epoch_s": round(load_hash_s, 4),
+            "ratio": round(load_orig_s / max(load_hash_s, 1e-9), 1),
+            "paper_webspam_ratio": 8.95, "paper_rcv1_ratio": 29.07}),
+        ("fig16/train_s_per_epoch_hashed", 0.0, {
+            "train_s": round(float(np.median([t.train_s for t in times_h])),
+                             4)}),
+    ]

@@ -1,0 +1,71 @@
+"""Paper Figures 13-15 + 19: online SGD/ASGD accuracy vs epochs, original
+vs b-bit hashed data.
+
+Claims: (i) ~20 epochs suffice on hashed data for near-final accuracy;
+(ii) b >= 8, k >= 200 matches the original-data accuracy; (iii) ASGD
+improves on SGD but still needs ~10-20 epochs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, bench_dataset
+from repro.core import Hash2U, lowest_bits, minhash_signatures
+from repro.data.sparse import to_dense
+from repro.models.linear import (accuracy, asgd_model, sgd_svm_init,
+                                 sgd_svm_step)
+
+D_BITS = 16
+K, B = 128, 8
+
+
+def run() -> list[Row]:
+    train, test = bench_dataset(n=512, D=2**D_BITS, avg_nnz=96, seed=7)
+    fam = Hash2U.create(jax.random.PRNGKey(0), K, D_BITS)
+    s_tr = lowest_bits(minhash_signatures(train.indices, train.mask, fam), B)
+    s_te = lowest_bits(minhash_signatures(test.indices, test.mask, fam), B)
+    x_tr, x_te = to_dense(train, 2**D_BITS), to_dense(test, 2**D_BITS)
+
+    rows: list[Row] = []
+    lam, eta0, bs = 1e-4, 0.5, 16
+
+    def epochs_curve(feature_kind, feats_tr, feats_te, average):
+        st = sgd_svm_init(K * (1 << B) if feature_kind == "hashed"
+                          else feats_tr.shape[1])
+        step = jax.jit(functools.partial(
+            sgd_svm_step, lam=lam, eta0=eta0, b=B,
+            feature_kind=feature_kind, average=average))
+        accs = []
+        for ep in range(20):
+            for i in range(0, feats_tr.shape[0], bs):
+                st = step(st, feats_tr[i:i + bs], train.labels[i:i + bs])
+            model = asgd_model(st) if average else st.model
+            accs.append(float(accuracy(model, feats_te, test.labels,
+                                       feature_kind=feature_kind, b=B)))
+        return accs
+
+    acc_orig = epochs_curve("dense", x_tr, x_te, False)
+    acc_hash = epochs_curve("hashed", s_tr, s_te, False)
+    acc_asgd = epochs_curve("hashed", s_tr, s_te, True)
+    rows.append(("fig14/final_acc", 0.0, {
+        "orig": round(acc_orig[-1], 4), "hashed": round(acc_hash[-1], 4),
+        "gap": round(abs(acc_orig[-1] - acc_hash[-1]), 4)}))
+    rows.append(("fig15/epochs_to_95pct_of_final", 0.0, {
+        "hashed": _epochs_to(acc_hash), "orig": _epochs_to(acc_orig)}))
+    rows.append(("fig19/asgd_vs_sgd", 0.0, {
+        "sgd_ep5": round(acc_hash[4], 4), "asgd_ep5": round(acc_asgd[4], 4),
+        "sgd_final": round(acc_hash[-1], 4),
+        "asgd_final": round(acc_asgd[-1], 4)}))
+    return rows
+
+
+def _epochs_to(curve, frac=0.95):
+    target = frac * max(curve)
+    for i, a in enumerate(curve):
+        if a >= target:
+            return i + 1
+    return len(curve)

@@ -1,0 +1,60 @@
+"""Paper Table 2: CPU preprocessing cost -- loading vs Permu / 2U /
+4U(Mod) / 4U(Bit) minhash signature computation.
+
+Paper numbers (webspam, k=500, seconds): load 970, Permu 6100, 2U 4100,
+4U-Mod 44000, 4U-Bit 14000 -- i.e. preprocessing >> loading, and BitMod
+cuts 4U by ~3x.  We reproduce the *ratios* on a scaled synthetic set with
+the pure-jnp reference implementations (the "CPU" rows of the paper).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, bench_dataset, time_fn
+from repro.core.hashing import Hash2U, Hash4U, PermutationFamily
+from repro.core.minhash import minhash_signatures
+from repro.data.pipeline import make_sharded_dataset, ChunkedLoader
+from repro.data.synthetic import DatasetSpec
+
+K = 128
+S = 20
+
+
+def run() -> list[Row]:
+    train, _ = bench_dataset(n=256, D=2**S, avg_nnz=256)
+    key = jax.random.PRNGKey(0)
+    rows: list[Row] = []
+
+    # data loading time (binary shards)
+    spec = DatasetSpec("t2", n=256, D=2**S, avg_nnz=256, seed=1)
+    paths = make_sharded_dataset(spec, n_shards=2)
+    t0 = time.perf_counter()
+    loader = ChunkedLoader(paths, chunk_size=128)
+    n_rows = sum(c.n for c in loader)
+    t_load_us = (time.perf_counter() - t0) * 1e6
+    rows.append(("table2/loading", t_load_us, {"rows": n_rows}))
+
+    fams = {
+        "permu": PermutationFamily.create(key, K, 2**S),
+        "2u": Hash2U.create(key, K, S),
+        "4u_bit": Hash4U.create(key, K, S, use_bitmod=True),
+        "4u_mod": Hash4U.create(key, K, S, use_bitmod=False),
+    }
+    times = {}
+    for name, fam in fams.items():
+        fn = jax.jit(lambda idx, msk, f=fam: minhash_signatures(idx, msk, f))
+        us = time_fn(fn, train.indices, train.mask)
+        times[name] = us
+        rows.append((f"table2/{name}", us, {"k": K}))
+
+    rows.append(("table2/ratios", 0.0, {
+        "prep_over_load_2u": round(times["2u"] / max(t_load_us, 1), 2),
+        "mod_over_bit_4u": round(times["4u_mod"] / times["4u_bit"], 2),
+        "paper_mod_over_bit": round(44000 / 14000, 2),
+    }))
+    return rows

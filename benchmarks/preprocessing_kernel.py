@@ -1,0 +1,67 @@
+"""Paper Table 3 + Figures 1-3: accelerator (Pallas kernel) preprocessing
+with the chunk-size sweep and the 3-phase breakdown.
+
+The paper's GPU pipeline: (i) CPU->GPU transfer, (ii) kernel, (iii)
+GPU->CPU transfer, swept over chunk sizes 1..50K; conclusion: cost is
+flat for chunk >= ~100, and transfer is ~2 orders below compute.  Here the
+phases are host->device put, the minhash kernel (Pallas; interpret mode on
+CPU, so *relative* phase structure not absolute speedup is the
+deliverable), and device->host get of the (n, k) signatures (b-bit packed,
+so phase (iii) moves k*b bits/example as in the paper).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, bench_dataset
+from repro.core.hashing import Hash2U
+from repro.core.bbit import pack_signatures
+from repro.kernels import minhash2u
+
+K, S, B = 128, 20, 8
+
+
+def run() -> list[Row]:
+    train, _ = bench_dataset(n=512, D=2**S, avg_nnz=256)
+    fam = Hash2U.create(jax.random.PRNGKey(0), K, S)
+    idx_np = np.asarray(train.indices)
+    counts_np = np.asarray(train.mask.sum(axis=1), np.int32)
+    rows: list[Row] = []
+
+    for chunk in (32, 128, 512):
+        t_in = t_kernel = t_out = 0.0
+        sigs = []
+        for lo in range(0, train.n, chunk):
+            hi = min(lo + chunk, train.n)
+            t0 = time.perf_counter()
+            d_idx = jax.device_put(idx_np[lo:hi])
+            d_cnt = jax.device_put(counts_np[lo:hi])
+            jax.block_until_ready((d_idx, d_cnt))
+            t1 = time.perf_counter()
+            sig = minhash2u(d_idx, d_cnt, fam.a1, fam.a2, s=S, b=B)
+            packed = pack_signatures(sig, B)
+            jax.block_until_ready(packed)
+            t2 = time.perf_counter()
+            host = np.asarray(packed)
+            t3 = time.perf_counter()
+            t_in += t1 - t0
+            t_kernel += t2 - t1
+            t_out += t3 - t2
+            sigs.append(host)
+        total_us = (t_in + t_kernel + t_out) * 1e6
+        rows.append((f"table3/chunk_{chunk}", total_us, {
+            "phase_in_us": round(t_in * 1e6, 1),
+            "phase_kernel_us": round(t_kernel * 1e6, 1),
+            "phase_out_us": round(t_out * 1e6, 1),
+            "bytes_out_per_example": sigs[0].shape[1] * 4,
+        }))
+
+    # determinism across chunk sizes (paper: results chunk-invariant)
+    a = np.concatenate(sigs)
+    rows.append(("table3/chunk_invariance", 0.0, {"checksum": int(a.sum())}))
+    return rows

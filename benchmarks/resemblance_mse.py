@@ -1,0 +1,53 @@
+"""Paper Appendix A, Figures 20-22: resemblance-estimation MSE with 2U
+hashing vs the theoretical variance (Eq. 11 of [26]), across D.
+
+Claim: for sparse data the empirical MSE matches theory already at
+D=2^16; denser pairs (OF-AND) need D >= 2^20.  We sweep the Table-5 word
+pairs (reconstructed with their exact f1, f2, R) over D in {2^16, 2^20}.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import (Hash2U, empirical_p_hat, estimate_resemblance,
+                        lowest_bits, minhash_signatures,
+                        theoretical_variance)
+from repro.data import TABLE5_PAIRS, word_pair_sets
+from repro.data.sparse import from_lists
+
+K = 128
+N_REP = 25
+PAIRS = [p for p in TABLE5_PAIRS if p[0] in
+         ("KONG-HONG", "OF-AND", "SAN-FRANCISCO", "A-TEST")]
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name, f1, f2, R in PAIRS:
+        for d_bits in (16, 20):
+            D = 2 ** d_bits
+            if f1 + f2 > D // 2:     # pair too dense for this universe
+                continue
+            s1, s2 = word_pair_sets(D, f1, f2, R, seed=13)
+            true_r = (len(np.intersect1d(s1, s2))
+                      / len(np.union1d(s1, s2)))
+            batch = from_lists([s1, s2])
+            for b in (1, 4):
+                errs = []
+                for rep in range(N_REP):
+                    fam = Hash2U.create(jax.random.PRNGKey(rep * 7 + b),
+                                        K, d_bits)
+                    sig = lowest_bits(minhash_signatures(
+                        batch.indices, batch.mask, fam), b)
+                    p_hat = float(empirical_p_hat(sig[0], sig[1]))
+                    errs.append(float(estimate_resemblance(
+                        p_hat, f1, f2, D, b)) - true_r)
+                mse = float(np.mean(np.square(errs)))
+                var_th = float(theoretical_variance(true_r, f1, f2, D, b, K))
+                rows.append((f"fig20_22/{name}_D2e{d_bits}_b{b}", 0.0, {
+                    "mse": round(mse, 6), "theory": round(var_th, 6),
+                    "ratio": round(mse / max(var_th, 1e-12), 2)}))
+    return rows

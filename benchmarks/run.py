@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import fmt_rows
+
+MODULES = [
+    ("preprocessing_cpu", "Table 2"),
+    ("preprocessing_kernel", "Table 3 / Figs 1-3"),
+    ("learning_hashfuncs", "Fig 4"),
+    ("vw_hashfuncs", "Fig 5"),
+    ("learning_scaling", "Figs 6-9"),
+    ("bbit_vs_vw", "Figs 10-12"),
+    ("online_learning", "Figs 13-15, 19"),
+    ("loading_time", "Figs 16, 18 / Table 4"),
+    ("resemblance_mse", "Figs 20-22 / App. A"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    all_rows = []
+    failures = []
+    for mod_name, paper_ref in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+            all_rows.extend(rows)
+            dt = time.perf_counter() - t0
+            print(f"# {mod_name} ({paper_ref}): {len(rows)} rows "
+                  f"in {dt:.1f}s", file=sys.stderr)
+        except Exception:
+            failures.append(mod_name)
+            print(f"# {mod_name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    print(fmt_rows(all_rows))
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

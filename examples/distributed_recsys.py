@@ -1,0 +1,85 @@
+"""End-to-end driver: distributed training of a recsys model whose user
+feature-set goes through the paper's b-bit minhash frontend.
+
+Trains AutoInt (reduced config) for a few hundred steps on synthetic CTR
+data with the production Trainer: data-parallel mesh over the local
+devices, checkpoint/resume, straggler heartbeat.  The hashed frontend is
+the paper's Eq.(5) construction embedded as a signature embedding-bag.
+
+Run:  PYTHONPATH=src python examples/distributed_recsys.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.steps import build_cell, init_inputs
+from repro.models.recsys import recsys_loss, serve_scores
+from repro.optim import adamw, warmup_cosine
+from repro.sharding.rules import set_mesh
+from repro.train import TrainState, Trainer, make_train_step
+
+
+def make_batch(key, cfg, batch_size):
+    """Synthetic CTR batch with a learnable signal: the label depends on
+    (field ids + the sparse behavior set) so both paths must be used."""
+    ks = jax.random.split(key, 4)
+    field_ids = jax.random.randint(ks[0], (batch_size, cfg.n_fields), 0,
+                                   cfg.vocab, dtype=jnp.int32)
+    set_ids = jax.random.randint(ks[1], (batch_size, cfg.set_nnz), 0,
+                                 1 << cfg.minhash_s, dtype=jnp.int32)
+    set_counts = jax.random.randint(ks[2], (batch_size,), 8, cfg.set_nnz,
+                                    dtype=jnp.int32)
+    signal = (field_ids[:, 0] % 2).astype(jnp.float32) * 2.0 \
+        + (set_ids[:, 0] % 3).astype(jnp.float32) - 2.0
+    labels = (jax.nn.sigmoid(signal)
+              > jax.random.uniform(ks[3], (batch_size,))).astype(jnp.float32)
+    return {"field_ids": field_ids, "set_ids": set_ids,
+            "set_counts": set_counts, "labels": labels}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_arch("autoint").smoke
+    from repro.models.recsys import init_recsys_params
+    params = init_recsys_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    print(f"autoint (reduced): {n_params:,} params, "
+          f"minhash frontend k={cfg.minhash_k} b={cfg.minhash_b}")
+
+    opt = adamw(warmup_cosine(3e-3, 20, args.steps))
+    state = TrainState.create(params, opt)
+    step = make_train_step(lambda p, b: recsys_loss(p, b, cfg), opt)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), args.steps)
+    batches = lambda: (make_batch(k, cfg, args.batch) for k in keys)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr = Trainer(step, ckpt_dir=ckpt_dir, ckpt_every=100)
+        state = tr.fit(state, batches, args.steps)
+        losses = [m["loss"] for m in tr.metrics_log]
+        print(f"loss: step1={losses[0]:.4f}  "
+              f"step{len(losses)}={losses[-1]:.4f}")
+        assert losses[-1] < losses[0], "training did not reduce the loss"
+
+    # quick eval: scores should separate the label signal
+    test = make_batch(jax.random.PRNGKey(99), cfg, 2048)
+    scores = serve_scores(state.params, test, cfg)
+    pred = (scores > 0.5).astype(jnp.float32)
+    acc = float(jnp.mean((pred == test["labels"]).astype(jnp.float32)))
+    print(f"holdout accuracy: {acc:.4f}")
+    print(f"straggler heartbeat: {tr.heartbeat.stragglers} slow steps "
+          f"of {len(tr.heartbeat.history)}")
+
+
+if __name__ == "__main__":
+    main()

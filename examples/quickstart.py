@@ -1,0 +1,55 @@
+"""Quickstart: the paper's pipeline in 60 lines.
+
+Generates sparse binary data, computes k b-bit minwise signatures under
+three hash families (full permutations / 2U / 4U -- the paper's §4
+comparison), trains a linear SVM on the implicit Eq.(5) expansion, and
+prints the test accuracies, which should be essentially identical.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.core import (Hash2U, Hash4U, PermutationFamily,
+                        family_storage_bytes, lowest_bits,
+                        minhash_signatures)
+from repro.data import TINY, generate
+from repro.models.linear import LinearModel, accuracy, make_loss_fn
+from repro.optim import adamw, constant
+from repro.train import TrainState, Trainer, make_train_step
+
+K, B, D_BITS = 128, 8, 16
+
+
+def signatures(batch, fam):
+    return lowest_bits(minhash_signatures(batch.indices, batch.mask, fam), B)
+
+
+def main():
+    train, test = generate(TINY)
+    print(f"data: n_train={train.n} n_test={test.n} D=2^{D_BITS} "
+          f"k={K} b={B}")
+    key = jax.random.PRNGKey(0)
+    families = {
+        "permutations": PermutationFamily.create(key, K, 1 << D_BITS),
+        "2U": Hash2U.create(key, K, D_BITS),
+        "4U": Hash4U.create(key, K, D_BITS),
+    }
+    for name, fam in families.items():
+        sig_tr, sig_te = signatures(train, fam), signatures(test, fam)
+        loss = make_loss_fn("svm", "hashed", B, C=1.0)
+        opt = adamw(constant(0.05))
+        state = TrainState.create(LinearModel.create(K * (1 << B)), opt)
+        step = make_train_step(lambda p, batch: loss(p, *batch), opt)
+        state = Trainer(step).fit(
+            state, lambda: iter([(sig_tr, train.labels)] * 120), 120)
+        acc = accuracy(state.params, sig_te, test.labels,
+                       feature_kind="hashed", b=B)
+        print(f"{name:14s} acc={float(acc):.4f}  "
+              f"hash-family storage={family_storage_bytes(fam):>12,} B")
+    print("\n(2U/4U match full permutations at a millionth of the storage "
+          "-- the paper's Issue-3 result.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Architecture configs: 10 assigned archs + the paper's own datasets."""
+
+from repro.configs.base import (ArchSpec, ShapeCell, all_archs, cells_for,
+                                config_for_cell, get_arch, get_cell,
+                                input_specs, is_skipped)
+
+__all__ = ["ArchSpec", "ShapeCell", "all_archs", "cells_for",
+           "config_for_cell", "get_arch", "get_cell", "input_specs",
+           "is_skipped"]

@@ -1,0 +1,241 @@
+"""Architecture/shape registry: every assigned (arch x shape) cell.
+
+Each arch module registers an ``ArchSpec``:
+  * ``family``    -- "lm" | "gnn" | "recsys"
+  * ``config``    -- the full published configuration (dry-run only),
+  * ``smoke``     -- reduced same-family config for CPU smoke tests,
+  * per-family shape cells come from the family tables below; an arch can
+    mark cells skipped (with a reason recorded into EXPERIMENTS.md).
+
+``input_specs(arch, cell, smoke)`` returns ShapeDtypeStruct stand-ins for
+every model input -- shardable, weak-type-correct, no allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import GNNConfig, subgraph_sizes
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import TransformerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str                       # step kind, see launch/steps.py
+    dims: Dict[str, int]
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str
+    config: Any
+    smoke: Any
+    source: str
+    skip_cells: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (autoint, deepseek_7b, deepseek_v3_671b, din,
+                               gatedgcn, llama4_scout, mind,
+                               mistral_large_123b, wide_deep, yi_34b)  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# Family shape tables (the assigned input-shape sets)
+# ---------------------------------------------------------------------------
+
+LM_CELLS = [
+    ShapeCell("train_4k", "lm_train", {"batch": 256, "seq": 4096}),
+    ShapeCell("prefill_32k", "lm_prefill", {"batch": 32, "seq": 32768}),
+    ShapeCell("decode_32k", "lm_decode", {"batch": 128, "seq": 32768}),
+    ShapeCell("long_500k", "lm_decode", {"batch": 1, "seq": 524288},
+              note="sub-quadratic attention required"),
+]
+
+GNN_CELLS = [
+    ShapeCell("full_graph_sm", "gnn_train_full",
+              {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433,
+               "n_classes": 7}),
+    ShapeCell("minibatch_lg", "gnn_train_sampled",
+              {"n_nodes": 232965, "n_edges": 114615892, "batch_nodes": 1024,
+               "fanout1": 15, "fanout2": 10, "d_feat": 602, "n_classes": 41}),
+    ShapeCell("ogb_products", "gnn_train_full",
+              {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100,
+               "n_classes": 47}),
+    ShapeCell("molecule", "gnn_train_graphs",
+              {"n_nodes": 30, "n_edges": 64, "batch": 128, "d_feat": 28,
+               "n_classes": 2}),
+]
+
+RECSYS_CELLS = [
+    ShapeCell("train_batch", "recsys_train", {"batch": 65536}),
+    ShapeCell("serve_p99", "recsys_serve", {"batch": 512}),
+    ShapeCell("serve_bulk", "recsys_serve", {"batch": 262144}),
+    ShapeCell("retrieval_cand", "recsys_retrieval",
+              {"batch": 1, "n_candidates": 1_000_000}),
+]
+
+FAMILY_CELLS = {"lm": LM_CELLS, "gnn": GNN_CELLS, "recsys": RECSYS_CELLS}
+
+
+def cells_for(arch_id: str):
+    spec = get_arch(arch_id)
+    return FAMILY_CELLS[spec.family]
+
+
+def get_cell(arch_id: str, cell_name: str) -> ShapeCell:
+    for c in cells_for(arch_id):
+        if c.name == cell_name:
+            return c
+    raise KeyError(f"{arch_id} has no cell {cell_name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Per-cell model config + input specs
+# ---------------------------------------------------------------------------
+
+SMOKE_LM = {"batch": 2, "seq": 64, "decode_len": 64}
+SMOKE_GNN = {"n_nodes": 64, "n_edges": 256, "d_feat": 16, "n_classes": 4,
+             "batch_nodes": 8, "fanout1": 3, "fanout2": 2, "batch": 4}
+SMOKE_RECSYS = {"batch": 32, "n_candidates": 128}
+
+
+def config_for_cell(arch_id: str, cell: ShapeCell, smoke: bool = False):
+    """Model config adjusted for this cell (GNN dims are per-cell)."""
+    spec = get_arch(arch_id)
+    cfg = spec.smoke if smoke else spec.config
+    if spec.family == "gnn":
+        dims = SMOKE_GNN if smoke else cell.dims
+        cfg = dataclasses.replace(
+            cfg, d_in=dims["d_feat"], n_classes=dims["n_classes"],
+            readout="graph" if cell.kind == "gnn_train_graphs" else "node")
+    return cfg
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad512(n: int) -> int:
+    """Edge arrays are padded (mask-valid) to a 512 multiple so they tile
+    and shard evenly; the data loader pads identically."""
+    return ((n + 511) // 512) * 512
+
+
+def input_specs(arch_id: str, cell_name: str, smoke: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for the cell's step inputs."""
+    spec = get_arch(arch_id)
+    cell = get_cell(arch_id, cell_name)
+    cfg = config_for_cell(arch_id, cell, smoke)
+    d = dict(cell.dims)
+    i32 = jnp.int32
+
+    if spec.family == "lm":
+        B = SMOKE_LM["batch"] if smoke else d["batch"]
+        S = SMOKE_LM["seq"] if smoke else d["seq"]
+        if cell.kind == "lm_train":
+            return {"tokens": _sd((B, S), i32), "labels": _sd((B, S), i32)}
+        if cell.kind == "lm_prefill":
+            return {"tokens": _sd((B, S), i32)}
+        if cell.kind == "lm_decode":
+            from repro.models.transformer import cache_shapes
+            cache = cache_shapes(cfg, B, S)
+            return {"cache": cache, "tokens": _sd((B,), i32),
+                    "pos": _sd((), i32)}
+
+    if spec.family == "gnn":
+        dims = SMOKE_GNN if smoke else d
+        if cell.kind == "gnn_train_full":
+            N, E = _pad512(dims["n_nodes"]), _pad512(dims["n_edges"])
+            return {
+                "node_feats": _sd((N, dims["d_feat"]), jnp.float32),
+                "edge_index": _sd((2, E), i32),
+                "edge_mask": _sd((E,), jnp.float32),
+                "labels": _sd((N,), i32),
+                "node_mask": _sd((N,), jnp.float32),
+            }
+        if cell.kind == "gnn_train_sampled":
+            n_sub, e_sub = subgraph_sizes(
+                dims["batch_nodes"], (dims["fanout1"], dims["fanout2"]))
+            n_sub, e_sub = _pad512(n_sub), _pad512(e_sub)
+            return {
+                "node_feats": _sd((n_sub, dims["d_feat"]), jnp.float32),
+                "edge_index": _sd((2, e_sub), i32),
+                "edge_mask": _sd((e_sub,), jnp.float32),
+                "labels": _sd((n_sub,), i32),
+                "node_mask": _sd((n_sub,), jnp.float32),
+            }
+        if cell.kind == "gnn_train_graphs":
+            Bg = dims["batch"]
+            N = Bg * dims["n_nodes"]
+            E = _pad512(Bg * dims["n_edges"])
+            return {
+                "node_feats": _sd((N, dims["d_feat"]), jnp.float32),
+                "edge_index": _sd((2, E), i32),
+                "edge_mask": _sd((E,), jnp.float32),
+                "labels": _sd((Bg,), i32),
+                "node_mask": _sd((N,), jnp.float32),
+                "graph_ids": _sd((N,), i32),
+            }
+
+    if spec.family == "recsys":
+        if cell.kind == "recsys_retrieval":
+            B = d["batch"]                     # always 1 query
+        else:
+            B = (SMOKE_RECSYS["batch"] if smoke else d["batch"])
+        out: Dict[str, Any] = {}
+        if cfg.interaction in ("concat", "self-attn"):
+            out["field_ids"] = _sd((B, cfg.n_fields), i32)
+        else:
+            out["hist_ids"] = _sd((B, cfg.seq_len), i32)
+            out["hist_mask"] = _sd((B, cfg.seq_len), jnp.float32)
+            out["target_id"] = _sd((B,), i32)
+        if cfg.use_minhash_frontend:
+            out["set_ids"] = _sd((B, cfg.set_nnz), i32)
+            out["set_counts"] = _sd((B,), i32)
+        if cell.kind == "recsys_train":
+            out["labels"] = _sd((B,), jnp.float32)
+        if cell.kind == "recsys_retrieval":
+            out["n_candidates"] = (SMOKE_RECSYS["n_candidates"] if smoke
+                                   else d["n_candidates"])
+        return out
+
+    raise ValueError(f"no input specs for {arch_id}/{cell_name}")
+
+
+def is_skipped(arch_id: str, cell_name: str) -> Optional[str]:
+    """Returns the skip reason, or None if the cell runs."""
+    spec = get_arch(arch_id)
+    if cell_name in spec.skip_cells:
+        return spec.skip_cells[cell_name]
+    return None

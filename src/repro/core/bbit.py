@@ -1,0 +1,92 @@
+"""b-bit minwise hashing: lowest-b-bit extraction, packing, and the Eq. (5)
+expansion that turns signatures into learnable features.
+
+The learning construction: each example's k b-bit values ``z^(b)_1..k``
+expand into a ``2^b * k``-dimensional binary vector with exactly k ones
+(Eq. 5).  A linear model on that expansion approximates resemblance-kernel
+learning.  We provide:
+
+  * ``lowest_bits``      -- z & (2^b - 1)
+  * ``pack_signatures``  -- bit-pack b-bit values into uint32 words (the
+                            storage the paper counts: k*b bits per example)
+  * ``expand_tokens``    -- the *implicit* expansion: token ids
+                            ``j * 2^b + z_j`` (a gather into a (k*2^b, ...)
+                            weight table == the one-hot dot of Eq. 5)
+  * ``expand_onehot``    -- the explicit dense 0/1 expansion (tests/small)
+  * ``storage_bits``     -- the paper's storage accounting for comparisons
+                            against VW / raw data.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowest_bits(sig: jax.Array, b: int) -> jax.Array:
+    """Keep the lowest b bits of each minhash value. Output uint32 in [0, 2^b)."""
+    if b >= 32:
+        return sig.astype(jnp.uint32)
+    return sig.astype(jnp.uint32) & jnp.uint32((1 << b) - 1)
+
+
+def expand_tokens(sig_b: jax.Array, b: int) -> jax.Array:
+    """Token ids for the implicit Eq.(5) expansion.
+
+    ``tok[i, j] = j * 2^b + z^(b)_{i,j}`` in ``[0, k * 2^b)``.  A linear
+    model is then ``sum_j w[tok[i, j]]`` -- identical to the inner product
+    with the explicit one-hot expansion, without materializing it.
+    """
+    k = sig_b.shape[-1]
+    offs = (jnp.arange(k, dtype=jnp.uint32) << b)
+    return (sig_b.astype(jnp.uint32) + offs).astype(jnp.int32)
+
+
+def expand_onehot(sig_b: jax.Array, b: int, dtype=jnp.float32) -> jax.Array:
+    """Explicit (n, k * 2^b) 0/1 expansion of Eq. (5).  For tests/small n."""
+    n, k = sig_b.shape
+    tok = expand_tokens(sig_b, b)
+    # one_hot over the k tokens then sum: exactly k ones per row, one in
+    # each length-2^b block (the tokens of different j never collide).
+    return jnp.sum(jax.nn.one_hot(tok, k * (1 << b), dtype=dtype), axis=1)
+
+
+def pack_signatures(sig_b: jax.Array, b: int) -> jax.Array:
+    """Bit-pack (n, k) b-bit values into (n, ceil(k*b/32)) uint32 words.
+
+    This is the wire/storage format (k*b bits per example).  b must divide
+    32 for lane-aligned packing (b in {1, 2, 4, 8, 16}); other b are stored
+    one-per-lane unpacked by callers.
+    """
+    if 32 % b != 0:
+        raise ValueError(f"pack_signatures needs b | 32, got b={b}")
+    per_word = 32 // b
+    n, k = sig_b.shape
+    k_pad = ((k + per_word - 1) // per_word) * per_word
+    z = jnp.pad(sig_b.astype(jnp.uint32), ((0, 0), (0, k_pad - k)))
+    z = z.reshape(n, k_pad // per_word, per_word)
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * b).astype(jnp.uint32)
+    return jnp.sum(z << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signatures(packed: jax.Array, b: int, k: int) -> jax.Array:
+    """Inverse of ``pack_signatures``; returns (n, k) uint32."""
+    per_word = 32 // b
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * b).astype(jnp.uint32)
+    z = (packed[..., None] >> shifts) & jnp.uint32((1 << b) - 1)
+    return z.reshape(packed.shape[0], -1)[:, :k]
+
+
+def storage_bits(k: int, b: int) -> int:
+    """Per-example storage of the hashed representation: k*b bits."""
+    return k * b
+
+
+def vw_storage_bits(m_bins: int, bits_per_counter: int = 32) -> int:
+    """Per-example storage for VW feature hashing with m bins (dense)."""
+    return m_bins * bits_per_counter
+
+
+def raw_storage_bits(avg_nnz: float, index_bits: int = 32) -> float:
+    """Per-example storage of the original sparse binary data."""
+    return avg_nnz * index_bits

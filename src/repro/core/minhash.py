@@ -1,0 +1,134 @@
+"""Minwise-hash signature computation (the paper's preprocessing step).
+
+Given a batch of binary feature *sets* (padded-CSR layout, see
+``repro.data.sparse``), compute for each set the k minima
+
+    z_j = min_{t in S} h_j(t),     j = 1..k
+
+under one of three hash families (permutation / 2U / 4U).  This is the
+expensive preprocessing the paper accelerates with GPUs; here the jnp path
+is the reference oracle and ``repro.kernels.minhash`` holds the Pallas TPU
+kernels.  The jnp path is written with a k-chunked scan so the
+``(n, nnz, k)`` intermediate never exceeds ``chunk_k`` lanes -- the same
+blocking idea as the kernel, expressed at the XLA level.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import (Hash2U, Hash4U, PermutationFamily,
+                                hash2u_apply, hash4u_apply)
+
+Family = Union[Hash2U, Hash4U, PermutationFamily]
+
+# Sentinel for masked (padding) slots: larger than any hash output.
+_PAD_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def minhash_signatures(indices: jax.Array, mask: jax.Array, family: Family,
+                       chunk_k: int = 64) -> jax.Array:
+    """Compute (n, k) uint32 signatures for a padded sparse batch.
+
+    Args:
+      indices: (n, max_nnz) int32 feature ids in [0, D).
+      mask:    (n, max_nnz) bool, True for real entries.
+      family:  hash family (Hash2U / Hash4U / PermutationFamily).
+      chunk_k: number of hash functions evaluated per scan step.
+
+    Returns:
+      (n, k) uint32 minima.
+    """
+    if isinstance(family, PermutationFamily):
+        return _minhash_perm(indices, mask, family)
+    if isinstance(family, Hash2U):
+        return _minhash_2u(indices, mask, family.a1, family.a2, family.s,
+                           family.variant, chunk_k)
+    if isinstance(family, Hash4U):
+        return _minhash_4u(indices, mask, family.a, family.s,
+                           family.use_bitmod, chunk_k)
+    raise TypeError(type(family))
+
+
+def _chunked_min(indices: jax.Array, mask: jax.Array, k: int, chunk_k: int,
+                 hash_chunk) -> jax.Array:
+    """Scan over k-chunks; ``hash_chunk(t, j0)`` -> (n, nnz, chunk_k)."""
+    n = indices.shape[0]
+    if k % chunk_k != 0:
+        # pad k up; extra lanes discarded at the end
+        k_pad = ((k + chunk_k - 1) // chunk_k) * chunk_k
+    else:
+        k_pad = k
+    n_chunks = k_pad // chunk_k
+
+    def body(carry, j0):
+        h = hash_chunk(indices, j0)                       # (n, nnz, chunk_k)
+        h = jnp.where(mask[..., None], h, _PAD_MAX)
+        return carry, jnp.min(h, axis=1)                  # (n, chunk_k)
+
+    _, mins = jax.lax.scan(body, None, jnp.arange(n_chunks) * chunk_k)
+    out = jnp.moveaxis(mins, 0, 1).reshape(n, k_pad)      # (n, k_pad)
+    return out[:, :k]
+
+
+def _minhash_2u(indices, mask, a1, a2, s, variant, chunk_k):
+    k = a1.shape[0]
+    chunk_k = min(chunk_k, k)
+    a1p, a2p = _pad_coeffs(chunk_k, a1, a2)
+
+    def hash_chunk(t, j0):
+        c1 = jax.lax.dynamic_slice_in_dim(a1p, j0, chunk_k)
+        c2 = jax.lax.dynamic_slice_in_dim(a2p, j0, chunk_k)
+        return hash2u_apply(t[..., None], c1, c2, s, variant)
+
+    return _chunked_min(indices, mask, k, chunk_k, hash_chunk)
+
+
+def _minhash_4u(indices, mask, a, s, use_bitmod, chunk_k):
+    k = a.shape[1]
+    chunk_k = min(chunk_k, k)
+    coeffs = _pad_coeffs(chunk_k, a[0], a[1], a[2], a[3])
+
+    def hash_chunk(t, j0):
+        c = [jax.lax.dynamic_slice_in_dim(ci, j0, chunk_k) for ci in coeffs]
+        return hash4u_apply(t[..., None], c[0], c[1], c[2], c[3], s,
+                            use_bitmod)
+
+    return _chunked_min(indices, mask, k, chunk_k, hash_chunk)
+
+
+def _minhash_perm(indices, mask, family: PermutationFamily):
+    # (k, D) gathered at (n, nnz) -> (n, nnz, k); D is small by construction.
+    vals = family(indices)
+    vals = jnp.where(mask[..., None], vals, _PAD_MAX)
+    return jnp.min(vals, axis=1)
+
+
+def _pad_coeffs(chunk_k, *arrs):
+    """Pad coefficient vectors so dynamic_slice never reads out of range."""
+    k = arrs[0].shape[0]
+    k_pad = ((k + chunk_k - 1) // chunk_k) * chunk_k
+    if k_pad == k:
+        return arrs if len(arrs) > 1 else arrs[0]
+    out = tuple(jnp.pad(a, (0, k_pad - k)) for a in arrs)
+    return out if len(out) > 1 else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Collision-probability utilities (used in tests / Appendix-A benchmarks)
+# ---------------------------------------------------------------------------
+
+def signature_matches(sig1: jax.Array, sig2: jax.Array) -> jax.Array:
+    """Fraction of matching minima -- the Eq. (2) estimator R̂_M."""
+    return jnp.mean((sig1 == sig2).astype(jnp.float32), axis=-1)
+
+
+def resemblance(set1_mask_onehot: jax.Array, set2_mask_onehot: jax.Array) -> jax.Array:
+    """Exact resemblance |S1 ∩ S2| / |S1 ∪ S2| from dense 0/1 vectors."""
+    inter = jnp.sum(set1_mask_onehot * set2_mask_onehot, axis=-1)
+    union = jnp.sum(jnp.maximum(set1_mask_onehot, set2_mask_onehot), axis=-1)
+    return inter / jnp.maximum(union, 1)

@@ -1,0 +1,85 @@
+"""Vowpal-Wabbit-style feature hashing (Weinberger et al. [37], Shi et al.
+[33]) -- the paper's §4.2/§5.3 baseline.
+
+Each original feature index t is mapped to bin ``h(t) in [0, m)`` and sign
+``xi(t) in {-1, +1}``; the hashed vector is ``x'_i = sum_{t: h(t)=i}
+xi(t) x_t``.  For the paper's binary data ``x_t in {0, 1}`` this is a
+signed count per bin.  Two randomness modes, matching Figure 5:
+
+  * ``full``  -- h and xi are uniformly random tables of size D (small D),
+  * ``u2``    -- h is the 2U multiply-shift scheme; xi is one extra 2U bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import Hash2U, hash2u_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class VWHasher:
+    mode: str                     # "full" | "u2"
+    m_bits: int                   # m = 2^m_bits bins
+    # full-random tables (mode == "full")
+    bin_table: Optional[jax.Array] = None    # (D,) int32
+    sign_table: Optional[jax.Array] = None   # (D,) int8 in {-1, +1}
+    # 2U coefficients (mode == "u2")
+    a1: Optional[jax.Array] = None
+    a2: Optional[jax.Array] = None
+    s1: Optional[jax.Array] = None
+    s2: Optional[jax.Array] = None
+
+    @property
+    def m(self) -> int:
+        return 1 << self.m_bits
+
+    @staticmethod
+    def create(key: jax.Array, m_bits: int, mode: str = "u2",
+               D: Optional[int] = None) -> "VWHasher":
+        if mode == "full":
+            if D is None:
+                raise ValueError("full-random VW needs explicit D")
+            kb, ks = jax.random.split(key)
+            bins = jax.random.randint(kb, (D,), 0, 1 << m_bits, dtype=jnp.int32)
+            signs = (jax.random.bernoulli(ks, 0.5, (D,)).astype(jnp.int8) * 2 - 1)
+            return VWHasher(mode=mode, m_bits=m_bits, bin_table=bins,
+                            sign_table=signs)
+        if mode == "u2":
+            k1, k2, k3, k4 = jax.random.split(key, 4)
+            mk = lambda kk: jax.random.bits(kk, (), jnp.uint32)
+            return VWHasher(mode=mode, m_bits=m_bits,
+                            a1=mk(k1), a2=mk(k2) | jnp.uint32(1),
+                            s1=mk(k3), s2=mk(k4) | jnp.uint32(1))
+        raise ValueError(mode)
+
+    def bins_and_signs(self, t: jax.Array):
+        if self.mode == "full":
+            return (self.bin_table[t].astype(jnp.int32),
+                    self.sign_table[t].astype(jnp.float32))
+        bins = hash2u_apply(t, self.a1, self.a2, self.m_bits).astype(jnp.int32)
+        sign_bit = hash2u_apply(t, self.s1, self.s2, 1)
+        return bins, (sign_bit.astype(jnp.float32) * 2.0 - 1.0)
+
+    def __call__(self, indices: jax.Array, mask: jax.Array,
+                 values: Optional[jax.Array] = None) -> jax.Array:
+        """Hash a padded sparse batch into dense (n, m) float vectors.
+
+        Args:
+          indices: (n, max_nnz) int32, mask: (n, max_nnz) bool.
+          values:  optional (n, max_nnz) float; default all-ones (binary).
+        """
+        n, nnz = indices.shape
+        bins, signs = self.bins_and_signs(indices)
+        vals = signs if values is None else signs * values
+        vals = jnp.where(mask, vals, 0.0)
+        # scatter-add each row's contributions into its m-bin vector
+        row = jnp.broadcast_to(jnp.arange(n)[:, None], (n, nnz))
+        flat_bin = (row * self.m + bins).reshape(-1)
+        out = jnp.zeros((n * self.m,), jnp.float32).at[flat_bin].add(
+            vals.reshape(-1), mode="drop")
+        return out.reshape(n, self.m)

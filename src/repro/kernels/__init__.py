@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: minhash preprocessing.
+
+  minhash.py  -- 2U / 4U minwise-hash signature kernels (the §3 GPU kernel,
+                 re-derived for TPU: VMEM tiling, VPU lanes over hash
+                 functions, running-min accumulation, in-kernel BitMod).
+  sigbag.py   -- Eq.(5) signature embedding-bag as one-hot MXU matmuls.
+  ops.py      -- jitted public wrappers (padding, block choice, dispatch).
+  ref.py      -- pure-jnp oracles for allclose validation.
+"""
+
+from repro.kernels.ops import batch_signatures, minhash2u, minhash4u, sigbag
+
+__all__ = ["batch_signatures", "minhash2u", "minhash4u", "sigbag"]

@@ -1,0 +1,201 @@
+"""Pallas TPU kernels for minwise-hash signature computation.
+
+This is the TPU adaptation of the paper's §3 GPU preprocessing kernel.
+
+Mapping of the paper's GPU design onto TPU v5e:
+
+  paper (CUDA, Tesla C2050)            this kernel (Pallas, TPU)
+  -----------------------------------  -----------------------------------
+  chunk of 10K sets copied to GPU mem  (BLK_N, BLK_T) index tiles DMA'd
+                                       HBM -> VMEM via BlockSpec
+  SIMD threads over (element, hash j)  VPU lanes over a (BLK_N, BLK_T,
+                                       BLK_K) tile; k is the 128-lane axis
+  per-set running minima in registers  running-min accumulator in the
+                                       revisited output block (grid's
+                                       innermost "arbitrary" dim iterates
+                                       nnz chunks)
+  avoid % via 2^32 overflow (Eq. 10)   identical uint32 wraparound +
+                                       multiply-shift
+  avoid % via BitMod, p = 2^31-1       identical shift/mask/cond-subtract,
+                                       with the 64-bit intermediate emulated
+                                       by 16-bit-limb long multiplication
+                                       (TPU has no 64-bit integer unit)
+
+Grid = (n/BLK_N, k/BLK_K, nnz/BLK_T); the last axis accumulates, so the
+output (n, k) block is revisited -- the standard Pallas reduction pattern
+("parallel", "parallel", "arbitrary").
+
+Padding is communicated via per-row nonzero counts: lane t of row i is
+valid iff ``t < counts[i]``; invalid lanes hash to 0xFFFFFFFF so they never
+win the min.  If ``b > 0`` the lowest-b-bit extraction (the *b-bit* step)
+is fused into the final grid iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import add64, mod_mersenne31, umul32_wide
+
+_U32 = jnp.uint32
+# numpy scalar (not a traced jax array) so kernels don't capture constants
+_PAD = np.uint32(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+def _minhash2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref, *,
+                      s: int, b: int, blk_t: int, variant: str):
+    t_step = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _PAD)
+
+    idx = idx_ref[...]                                    # (BLK_N, BLK_T) i32
+    counts = counts_ref[...]                              # (BLK_N, 1) i32
+    col = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) + t_step * blk_t
+    valid = col < counts                                  # (BLK_N, BLK_T)
+
+    a1 = a1_ref[...]                                      # (1, BLK_K) u32
+    a2 = a2_ref[...]
+    # (BLK_N, BLK_T, BLK_K): the SIMD tile. uint32 mul wraps mod 2^32.
+    h = a1[0][None, None, :] + a2[0][None, None, :] * idx.astype(_U32)[..., None]
+    if s < 32:
+        if variant == "high":
+            h = h >> _U32(32 - s)
+        else:
+            h = h & _U32((1 << s) - 1)
+    h = jnp.where(valid[..., None], h, _PAD)
+    blk_min = jnp.min(h, axis=1)                          # (BLK_N, BLK_K)
+    out_ref[...] = jnp.minimum(out_ref[...], blk_min)
+
+    if b > 0:
+        @pl.when(t_step == n_t - 1)
+        def _extract_bbits():
+            out_ref[...] = out_ref[...] & _U32((1 << b) - 1)
+
+
+def _minhash4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *,
+                      s: int, b: int, blk_t: int):
+    t_step = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _PAD)
+
+    idx = idx_ref[...]
+    counts = counts_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) + t_step * blk_t
+    valid = col < counts
+
+    a = a_ref[...]                                        # (4, BLK_K) u32
+    t = idx.astype(_U32)[..., None]                       # (BLK_N, BLK_T, 1)
+    # Horner: acc = ((a4 t + a3) t + a2) t + a1, each step mod p via BitMod.
+    acc = jnp.broadcast_to(a[3][None, None, :], t.shape[:2] + (a.shape[1],))
+    for i in (2, 1, 0):
+        hi, lo = umul32_wide(acc, t)                      # acc*t < 2^62
+        hi, lo = add64(hi, lo, jnp.broadcast_to(a[i][None, None, :], lo.shape))
+        acc = mod_mersenne31(hi, lo)
+    if s < 31:
+        acc = acc & _U32((1 << s) - 1)
+    h = jnp.where(valid[..., None], acc, _PAD)
+    blk_min = jnp.min(h, axis=1)
+    out_ref[...] = jnp.minimum(out_ref[...], blk_min)
+
+    if b > 0:
+        @pl.when(t_step == n_t - 1)
+        def _extract_bbits():
+            out_ref[...] = out_ref[...] & _U32((1 << b) - 1)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+def _common_grid_specs(n, nnz, k, blk_n, blk_t, blk_k):
+    if n % blk_n or nnz % blk_t or k % blk_k:
+        raise ValueError(
+            f"shapes must tile: n={n}%{blk_n}, nnz={nnz}%{blk_t}, k={k}%{blk_k}")
+    grid = (n // blk_n, k // blk_k, nnz // blk_t)
+    counts_spec = pl.BlockSpec((blk_n, 1), lambda i, j, t: (i, 0))
+    idx_spec = pl.BlockSpec((blk_n, blk_t), lambda i, j, t: (i, t))
+    out_spec = pl.BlockSpec((blk_n, blk_k), lambda i, j, t: (i, j))
+    return grid, counts_spec, idx_spec, out_spec
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return {}
+    try:  # TPU-only: declare the reduction dim non-parallel
+        from jax.experimental.pallas import tpu as pltpu
+        for name in ("CompilerParams", "TPUCompilerParams"):
+            cls = getattr(pltpu, name, None)
+            if cls is not None:
+                return {"compiler_params": cls(
+                    dimension_semantics=("parallel", "parallel", "arbitrary"))}
+    except ImportError:
+        pass
+    return {}
+
+
+def minhash2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
+                     a2: jax.Array, *, s: int, b: int = 0,
+                     blk_n: int = 8, blk_t: int = 128, blk_k: int = 128,
+                     variant: str = "high", interpret: bool = True) -> jax.Array:
+    """2U minhash signatures: (n, nnz) indices -> (n, k) uint32 minima.
+
+    Args:
+      indices: (n, max_nnz) int32, padded.
+      counts:  (n, 1) int32 valid-lane counts per row.
+      a1, a2:  (k,) uint32 multiply-shift coefficients (a2 odd).
+      s:       D = 2^s.
+      b:       if > 0, fuse lowest-b-bit extraction into the last step.
+    """
+    n, nnz = indices.shape
+    k = a1.shape[0]
+    grid, counts_spec, idx_spec, out_spec = _common_grid_specs(
+        n, nnz, k, blk_n, blk_t, blk_k)
+    coeff_spec = pl.BlockSpec((1, blk_k), lambda i, j, t: (0, j))
+    kern = functools.partial(_minhash2u_kernel, s=s, b=b, blk_t=blk_t,
+                             variant=variant)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[counts_spec, idx_spec, coeff_spec, coeff_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.uint32),
+        interpret=interpret,
+        **_compiler_params(interpret),
+    )(counts, indices, a1[None, :], a2[None, :])
+
+
+def minhash4u_pallas(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
+                     s: int, b: int = 0, blk_n: int = 8, blk_t: int = 128,
+                     blk_k: int = 128, interpret: bool = True) -> jax.Array:
+    """4U minhash signatures with in-kernel Mersenne BitMod (§3.4)."""
+    n, nnz = indices.shape
+    k = a.shape[1]
+    grid, counts_spec, idx_spec, out_spec = _common_grid_specs(
+        n, nnz, k, blk_n, blk_t, blk_k)
+    coeff_spec = pl.BlockSpec((4, blk_k), lambda i, j, t: (0, j))
+    kern = functools.partial(_minhash4u_kernel, s=s, b=b, blk_t=blk_t)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[counts_spec, idx_spec, coeff_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.uint32),
+        interpret=interpret,
+        **_compiler_params(interpret),
+    )(counts, indices, a)

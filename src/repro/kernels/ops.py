@@ -1,0 +1,102 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These pad inputs up to tile boundaries, pick block shapes, dispatch to the
+Pallas kernel (interpret mode on CPU, compiled on TPU), and slice the
+result back.  Downstream code (preprocessing pipeline, recsys hashed
+frontends, benchmarks) calls these, never `pl.pallas_call` directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.sparse import SparseBatch
+from repro.kernels.minhash import minhash2u_pallas, minhash4u_pallas
+from repro.kernels.sigbag import sigbag_pallas
+from repro.kernels import ref as kref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, mult, axis, value=0):
+    size = x.shape[axis]
+    target = ((size + mult - 1) // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "b", "variant", "use_pallas",
+                                             "blk_n", "blk_t", "blk_k"))
+def minhash2u(indices: jax.Array, counts: jax.Array, a1: jax.Array,
+              a2: jax.Array, *, s: int, b: int = 0, variant: str = "high",
+              use_pallas: bool = True, blk_n: int = 8, blk_t: int = 128,
+              blk_k: int = 128) -> jax.Array:
+    """Batched 2U minhash signatures. counts: (n,) or (n,1) int32."""
+    n, _ = indices.shape
+    k = a1.shape[0]
+    counts = counts.reshape(-1, 1).astype(jnp.int32)
+    if not use_pallas:
+        return kref.minhash2u_ref(indices, counts, a1, a2, s=s, b=b,
+                                  variant=variant)
+    idx = _pad_axis(_pad_axis(indices, blk_t, 1), blk_n, 0)
+    cts = _pad_axis(counts, blk_n, 0)
+    a1p = _pad_axis(a1, blk_k, 0)
+    a2p = _pad_axis(a2, blk_k, 0, value=1)
+    out = minhash2u_pallas(idx, cts, a1p, a2p, s=s, b=b, blk_n=blk_n,
+                           blk_t=blk_t, blk_k=blk_k, variant=variant,
+                           interpret=not _on_tpu())
+    return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "b", "use_pallas", "blk_n",
+                                             "blk_t", "blk_k"))
+def minhash4u(indices: jax.Array, counts: jax.Array, a: jax.Array, *, s: int,
+              b: int = 0, use_pallas: bool = True, blk_n: int = 8,
+              blk_t: int = 128, blk_k: int = 128) -> jax.Array:
+    """Batched 4U minhash signatures (Mersenne BitMod path)."""
+    n, _ = indices.shape
+    k = a.shape[1]
+    counts = counts.reshape(-1, 1).astype(jnp.int32)
+    if not use_pallas:
+        return kref.minhash4u_ref(indices, counts, a, s=s, b=b)
+    idx = _pad_axis(_pad_axis(indices, blk_t, 1), blk_n, 0)
+    cts = _pad_axis(counts, blk_n, 0)
+    ap = _pad_axis(a, blk_k, 1, value=1)
+    out = minhash4u_pallas(idx, cts, ap, s=s, b=b, blk_n=blk_n, blk_t=blk_t,
+                           blk_k=blk_k, interpret=not _on_tpu())
+    return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "blk_n"))
+def sigbag(tokens: jax.Array, table: jax.Array, *, use_pallas: bool = True,
+           blk_n: int = 128) -> jax.Array:
+    """Signature embedding-bag: out[i] = sum_j table[j, tokens[i, j]]."""
+    if not use_pallas:
+        return kref.sigbag_ref(tokens, table)
+    n = tokens.shape[0]
+    tok = _pad_axis(tokens, blk_n, 0)
+    out = sigbag_pallas(tok, table, blk_n=blk_n, interpret=not _on_tpu())
+    return out[:n]
+
+
+def batch_signatures(batch: SparseBatch, family, *, b: int = 0,
+                     use_pallas: bool = True) -> jax.Array:
+    """Signatures for a SparseBatch under a Hash2U/Hash4U family."""
+    from repro.core.hashing import Hash2U, Hash4U
+    counts = jnp.sum(batch.mask.astype(jnp.int32), axis=1)
+    if isinstance(family, Hash2U):
+        return minhash2u(batch.indices, counts, family.a1, family.a2,
+                         s=family.s, b=b, variant=family.variant,
+                         use_pallas=use_pallas)
+    if isinstance(family, Hash4U):
+        return minhash4u(batch.indices, counts, family.a, s=family.s, b=b,
+                         use_pallas=use_pallas)
+    raise TypeError(f"Pallas path supports 2U/4U families, got {type(family)}")

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes the same value as its kernel with no Pallas
+machinery; kernel tests sweep shapes/dtypes and assert exact (integer) or
+allclose (float) agreement in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash2u_apply, hash4u_apply
+
+_PAD = jnp.uint32(0xFFFFFFFF)
+
+
+def minhash2u_ref(indices: jax.Array, counts: jax.Array, a1: jax.Array,
+                  a2: jax.Array, *, s: int, b: int = 0,
+                  variant: str = "high") -> jax.Array:
+    """(n, nnz) x (k,) -> (n, k) uint32 minima (optionally b-bit masked)."""
+    col = jnp.arange(indices.shape[1])[None, :]
+    valid = col < counts                                     # (n, nnz)
+    h = hash2u_apply(indices[..., None], a1, a2, s, variant)  # (n, nnz, k)
+    h = jnp.where(valid[..., None], h, _PAD)
+    out = jnp.min(h, axis=1)
+    if b > 0:
+        out = out & jnp.uint32((1 << b) - 1)
+    return out
+
+
+def minhash4u_ref(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
+                  s: int, b: int = 0) -> jax.Array:
+    col = jnp.arange(indices.shape[1])[None, :]
+    valid = col < counts
+    h = hash4u_apply(indices[..., None], a[0], a[1], a[2], a[3], s, True)
+    h = jnp.where(valid[..., None], h, _PAD)
+    out = jnp.min(h, axis=1)
+    if b > 0:
+        out = out & jnp.uint32((1 << b) - 1)
+    return out
+
+
+def sigbag_ref(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """out[i] = sum_j table[j, tokens[i, j]] (fp32 accumulation)."""
+    k = tokens.shape[1]
+    # gather per slot then sum: (n, k, d) -> (n, d)
+    gathered = jnp.take_along_axis(
+        table[None],                                   # (1, k, 2^b, d)
+        tokens[:, :, None, None].astype(jnp.int32),    # (n, k, 1, 1)
+        axis=2,
+    )[:, :, 0, :]
+    return jnp.sum(gathered.astype(jnp.float32), axis=1).astype(table.dtype)

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+    # XLA:CPU's while-loop invariant code motion hoists fp32 converts of
+    # scanned (layer-stacked) tensors out of loops, materializing
+    # whole-stack fp32 copies (2x params!).  XLA:TPU schedules these
+    # memory-aware; on the CPU dry-run we disable the passes so
+    # memory_analysis() reflects the TPU-realistic footprint.
+    + " --xla_disable_hlo_passes=while-loop-expensive-invariant-code-motion"
+    ",while-loop-invariant-code-motion")
+# The lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the full-config step program, places params /
+optimizer state / inputs under the production shardings, and runs
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., donate...).lower(*avals)
+        compiled = lowered.compile()
+        compiled.memory_analysis()    # proves it fits 16 GB/chip
+        compiled.cost_analysis()      # FLOPs/bytes for the roofline
+
+for the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.  Results
+(bytes/chip, FLOPs, collective schedule, roofline terms) are appended to
+experiments/dryrun.jsonl, which EXPERIMENTS.md reads.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-7b --cell train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.configs import all_archs, cells_for, is_skipped
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline import hardware as hw
+from repro.roofline.analysis import analyze
+from repro.sharding.rules import set_mesh
+
+
+def _to_named(mesh, spec_tree, aval_tree):
+    """Attach NamedShardings; drop axes that don't divide the dim."""
+    def fix(spec, aval):
+        from jax.sharding import PartitionSpec as P
+        dims = aval.shape
+        parts = tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))
+        clean = []
+        for dim, ax in zip(dims, parts):
+            if ax is None:
+                clean.append(None)
+                continue
+            names = (ax,) if isinstance(ax, str) else tuple(ax)
+            # resolve "batch" -> data axes present in this mesh
+            is_literal_tuple = not isinstance(ax, str)
+            resolved = []
+            for nm in names:
+                if nm == "batch" or (nm == "data" and not is_literal_tuple):
+                    # logical axes span all data-parallel mesh axes;
+                    # "data" inside a literal tuple stays literal
+                    resolved.extend(n for n in ("pod", "data")
+                                    if n in mesh.axis_names)
+                elif nm == "all":
+                    resolved.extend(mesh.axis_names)
+                elif nm in mesh.axis_names:
+                    resolved.append(nm)
+            resolved = list(dict.fromkeys(resolved))
+            # greedy right-drop until the dim divides (e.g. 16 experts on
+            # a ("model", "data") spec keep only "model")
+            while resolved and dim % math.prod(
+                    mesh.shape[n] for n in resolved) != 0:
+                resolved.pop()
+            if resolved:
+                clean.append(tuple(resolved) if len(resolved) > 1
+                             else resolved[0])
+            else:
+                clean.append(None)
+        return NamedSharding(mesh, P(*clean))
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, aval_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def run_cell(arch_id: str, cell_name: str, multi_pod: bool = False,
+             smoke: bool = False, keep_artifacts: bool = False):
+    """Lower+compile one cell; returns a result dict (and artifacts)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    program = build_cell(arch_id, cell_name, smoke=smoke)
+
+    with_shard = lambda avals, specs: jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        avals, _to_named(mesh, specs, avals))
+
+    t0 = time.time()
+    with set_mesh(mesh):
+        p_avals = with_shard(program.param_avals, program.param_specs)
+        in_avals = with_shard(program.input_avals, program.input_specs_tree)
+        if program.opt_avals is not None:
+            o_avals = with_shard(program.opt_avals, program.opt_specs)
+            jitted = jax.jit(program.step, donate_argnums=(0, 1))
+            lowered = jitted.lower(p_avals, o_avals, in_avals)
+        else:
+            donate = (1,) if program.kind == "lm_decode" else ()
+            jitted = jax.jit(program.step, donate_argnums=donate)
+            lowered = jitted.lower(p_avals, in_avals)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        roof = analyze(program, compiled, mesh, hlo_text=hlo_text,
+                       smoke=smoke)
+
+    mem_total = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    result = {
+        "arch": arch_id, "cell": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "args_bytes": int(mem.argument_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "total_per_chip_bytes": int(mem_total),
+            "fits_hbm": bool(mem_total <= hw.HBM_BYTES),
+        },
+        "cost": {
+            "hlo_flops_per_chip": roof.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": roof.hlo_bytes_per_chip,
+            "collective_bytes_per_chip": roof.coll_bytes_per_chip,
+            "collective_breakdown": roof.coll_breakdown,
+        },
+        "roofline": {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "bottleneck": roof.bottleneck,
+            "model_flops": roof.model_flops,
+            "useful_flop_frac": roof.useful_flop_frac,
+            "peak_fraction": roof.peak_fraction,
+        },
+    }
+    if keep_artifacts:
+        return result, compiled, lowered, program, mesh
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (debug only)")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(all_archs()) if (args.all or not args.arch) \
+        else [args.arch]
+    for a in archs:
+        for c in cells_for(a):
+            if args.cell and c.name != args.cell:
+                continue
+            cells.append((a, c.name))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for arch_id, cell_name in cells:
+            for mp in meshes:
+                tag = f"{arch_id}/{cell_name}/{'2x16x16' if mp else '16x16'}"
+                reason = is_skipped(arch_id, cell_name)
+                if reason:
+                    rec = {"arch": arch_id, "cell": cell_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "skipped", "reason": reason}
+                    print(f"SKIP {tag}: {reason}")
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    continue
+                try:
+                    rec = run_cell(arch_id, cell_name, multi_pod=mp,
+                                   smoke=args.smoke)
+                    r = rec["roofline"]
+                    print(f"OK   {tag}: mem/chip="
+                          f"{rec['memory']['total_per_chip_bytes']/2**30:.2f}"
+                          f"GiB fits={rec['memory']['fits_hbm']} "
+                          f"bottleneck={r['bottleneck']} "
+                          f"peak_frac={r['peak_fraction']:.3f} "
+                          f"(compile {rec['compile_s']:.0f}s)")
+                except Exception as e:
+                    rec = {"arch": arch_id, "cell": cell_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=5)
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+
+
+if __name__ == "__main__":
+    main()

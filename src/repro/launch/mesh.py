@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") -- the
+"pod" axis is an outer data-parallel axis whose gradient all-reduce
+crosses the inter-pod links once per step.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1):
+    """A small mesh over the real local devices (tests)."""
+    devs = jax.devices()[:n_devices]
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devs).reshape(1, len(devs)),
+                             ("data", "model"))

@@ -1,0 +1,319 @@
+"""Step-function builders per (architecture family x step kind).
+
+One factory, ``build_cell(arch_id, cell_name, smoke)``, returns a
+``CellProgram``: the step callable, shape-only input avals, and the
+PartitionSpec trees for inputs/params/opt-state -- everything the smoke
+tests, the dry-run and the roofline harness need.  Smoke tests call
+``program.init_inputs(key)`` to materialize small real inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (cells_for, config_for_cell, get_arch,
+                                get_cell, input_specs)
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.optim import adamw, warmup_cosine
+from repro.optim.base import Optimizer, apply_updates
+from repro.optim.optimizers import adafactor_fused
+from repro.sharding.params import opt_state_specs, param_specs_for
+
+ADAFACTOR_THRESHOLD = 50e9      # params above this use factored optimizer
+
+
+@dataclasses.dataclass
+class CellProgram:
+    arch_id: str
+    cell_name: str
+    kind: str
+    family: str
+    config: Any
+    step: Callable                      # step(params, [opt_state,] **inputs)
+    param_avals: Any
+    opt_avals: Any                      # None for inference kinds
+    input_avals: Dict[str, Any]
+    param_specs: Any
+    opt_specs: Any
+    input_specs_tree: Dict[str, Any]
+    optimizer: Optional[Optimizer]
+    init_params: Callable[[jax.Array], Any]
+
+    def abstract_args(self) -> Tuple:
+        if self.opt_avals is not None:
+            return (self.param_avals, self.opt_avals, self.input_avals)
+        return (self.param_avals, self.input_avals)
+
+    def arg_specs(self) -> Tuple:
+        if self.opt_avals is not None:
+            return (self.param_specs, self.opt_specs, self.input_specs_tree)
+        return (self.param_specs, self.input_specs_tree)
+
+
+MOMENTUM_FREE_THRESHOLD = 300e9   # T5-style beta1=0 adafactor above this
+
+
+def _pick_optimizer(n_params: int, steps: int = 10000, family: str = "lm"
+                    ) -> Tuple[Optimizer, bool]:
+    """Returns (optimizer, fused) -- fused optimizers apply updates
+    in-place per layer slice (see optim.adafactor_fused)."""
+    lr = warmup_cosine(3e-4, 200, steps)
+    if family == "recsys":
+        # embedding tables dominate: factored second moment (O(V + d)
+        # state per table, rowwise-adagrad-like) instead of AdamW's
+        # 2x-fp32-table state+traffic -- §Perf autoint iteration 1
+        return adafactor_fused(lr, momentum=None), True
+    if n_params > MOMENTUM_FREE_THRESHOLD:
+        # 671B-class: even bf16 momentum (~5 GB/chip at 256 chips) would
+        # blow the 16 GB HBM budget; classic momentum-free Adafactor.
+        return adafactor_fused(lr, momentum=None), True
+    if n_params > ADAFACTOR_THRESHOLD:
+        return adafactor_fused(lr, momentum=0.9), True
+    return adamw(lr, weight_decay=0.01), False
+
+
+def _make_train_step(loss_fn, optimizer, microbatch: int = 1,
+                     fused: bool = False):
+    """Train step with optional gradient accumulation over microbatches.
+
+    Microbatching bounds the remat activation stash: each scan iteration
+    runs fwd+bwd on 1/m of the batch, so only that slice's stash is live.
+    Gradients accumulate in the parameter dtype (bf16 for the large LMs --
+    one extra param-sized buffer per chip).  ``fused`` optimizers apply
+    updates themselves (update(g, s, p) -> (new_params, new_state)).
+    """
+    def apply_opt(grads, opt_state, params):
+        if fused:
+            return optimizer.update(grads, opt_state, params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state
+
+    if microbatch <= 1:
+        def step(params, opt_state, inputs):
+            loss, grads = jax.value_and_grad(loss_fn)(params, inputs)
+            params, opt_state = apply_opt(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return step
+
+    def step(params, opt_state, inputs):
+        m = microbatch
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), inputs)
+
+        def body(carry, mb):
+            gacc, lacc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), gacc, grads)
+            return (gacc, lacc + loss), None
+
+        g0 = jax.tree_util.tree_map(jnp.zeros_like, params)
+        (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                        mbs)
+        # keep the param dtype: bf16 / python-int silently promotes to f32,
+        # which would drag a full fp32 grad tree through the optimizer
+        grads = jax.tree_util.tree_map(
+            lambda g: (g / m).astype(g.dtype), grads)
+        params, opt_state = apply_opt(grads, opt_state, params)
+        return params, opt_state, loss / m
+
+    return step
+
+
+# -- input sharding specs per kind ------------------------------------------
+
+def _lm_input_spec_tree(kind: str, cfg, avals) -> Dict[str, Any]:
+    if kind in ("lm_train", "lm_prefill"):
+        return {k: P("batch", None) for k in avals}
+    # decode: cache entries (L, B, len, ...) -- shard cache length over
+    # "model" (decode sequence parallelism), batch over "batch".
+    def cache_spec(leaf):
+        if leaf.ndim == 5:      # (L, B, len, n_kv, hd)
+            return P(None, "batch", "model", None, None)
+        return P(None, "batch", "model", None)  # (L, B, len, lora/rope)
+
+    return {
+        "cache": jax.tree_util.tree_map(cache_spec, avals["cache"]),
+        "tokens": P("batch"),
+        "pos": P(),
+    }
+
+
+def _gnn_input_spec_tree(avals) -> Dict[str, Any]:
+    spec = {
+        "node_feats": P("batch", None),
+        "edge_index": P(None, ("batch", "model")),
+        "edge_mask": P(("batch", "model")),
+        "labels": P("batch"),
+        "node_mask": P("batch"),
+    }
+    if "graph_ids" in avals:
+        spec["graph_ids"] = P("batch")
+    return spec
+
+
+def _recsys_input_spec_tree(avals) -> Dict[str, Any]:
+    out = {}
+    for k, v in avals.items():
+        if k == "n_candidates":
+            continue
+        rank = len(v.shape)
+        out[k] = P("batch", *([None] * (rank - 1))) if rank else P()
+    return out
+
+
+# -- cell builder -------------------------------------------------------------
+
+def build_cell(arch_id: str, cell_name: str, smoke: bool = False
+               ) -> CellProgram:
+    spec = get_arch(arch_id)
+    cell = get_cell(arch_id, cell_name)
+    cfg = config_for_cell(arch_id, cell, smoke)
+    avals = input_specs(arch_id, cell_name, smoke)
+    family = spec.family
+
+    if family == "lm":
+        init = functools.partial(tfm.init_params, cfg)
+        loss = functools.partial(_lm_loss, cfg=cfg)
+    elif family == "gnn":
+        init = functools.partial(_gnn_init, cfg)
+        loss = functools.partial(_gnn_loss, cfg=cfg)
+    else:
+        init = functools.partial(_recsys_init, cfg)
+        loss = functools.partial(_recsys_loss, cfg=cfg)
+
+    import math
+    param_avals = jax.eval_shape(init, jax.random.PRNGKey(0))
+    n_params = sum(math.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(param_avals))
+    p_specs = param_specs_for(family, param_avals)
+
+    kind = cell.kind
+    optimizer = None
+    opt_avals = None
+    o_specs = None
+
+    if kind in ("lm_train", "gnn_train_full", "gnn_train_sampled",
+                "gnn_train_graphs", "recsys_train"):
+        optimizer, fused = _pick_optimizer(n_params, family=family)
+        opt_avals = jax.eval_shape(optimizer.init, param_avals)
+        o_specs = opt_state_specs(p_specs, param_avals, opt_avals)
+        micro = getattr(cfg, "microbatch", 1) if not smoke else 1
+        step = _make_train_step(loss, optimizer, microbatch=micro,
+                                fused=fused)
+    elif kind == "lm_prefill":
+        def step(params, inputs):
+            return tfm.forward(params, inputs["tokens"], cfg)
+    elif kind == "lm_decode":
+        def step(params, inputs):
+            return tfm.serve_step(params, inputs["cache"], inputs["tokens"],
+                                  inputs["pos"], cfg)
+    elif kind == "recsys_serve":
+        def step(params, inputs):
+            return recsys_lib.serve_scores(params, inputs, cfg)
+    elif kind == "recsys_retrieval":
+        n_cand = avals.pop("n_candidates")
+
+        def step(params, inputs):
+            return recsys_lib.retrieval_scores(params, inputs, cfg, n_cand)
+    else:
+        raise ValueError(kind)
+
+    if family == "lm":
+        in_spec_tree = _lm_input_spec_tree(kind, cfg, avals)
+    elif family == "gnn":
+        in_spec_tree = _gnn_input_spec_tree(avals)
+    else:
+        in_spec_tree = _recsys_input_spec_tree(avals)
+
+    return CellProgram(
+        arch_id=arch_id, cell_name=cell_name, kind=kind, family=family,
+        config=cfg, step=step, param_avals=param_avals, opt_avals=opt_avals,
+        input_avals=avals, param_specs=p_specs, opt_specs=o_specs,
+        input_specs_tree=in_spec_tree, optimizer=optimizer,
+        init_params=init)
+
+
+def _lm_loss(params, inputs, cfg):
+    return tfm.train_loss(params, inputs, cfg)
+
+
+def _gnn_init(cfg, key):
+    return gnn_lib.init_gnn_params(cfg, key)
+
+
+def _gnn_loss(params, inputs, cfg):
+    return gnn_lib.gnn_loss(params, inputs, cfg)
+
+
+def _recsys_init(cfg, key):
+    return recsys_lib.init_recsys_params(cfg, key)
+
+
+def _recsys_loss(params, inputs, cfg):
+    return recsys_lib.recsys_loss(params, inputs, cfg)
+
+
+# -- concrete input materialization (smoke tests / examples) -----------------
+
+def init_inputs(program: CellProgram, key: jax.Array) -> Dict[str, Any]:
+    """Random small inputs matching the cell's avals (smoke scale)."""
+    out = {}
+    cfg = program.config
+    for name, aval in program.input_avals.items():
+        k, key = jax.random.split(key)
+        out[name] = _random_like(k, name, aval, program)
+    if program.kind == "gnn_train_graphs":
+        # consistent block-diagonal graph ids
+        n_nodes = program.input_avals["node_feats"].shape[0]
+        bg = program.input_avals["labels"].shape[0]
+        per = n_nodes // bg
+        out["graph_ids"] = jnp.repeat(jnp.arange(bg, dtype=jnp.int32), per)
+    return out
+
+
+def _random_like(key, name: str, aval, program: CellProgram):
+    cfg = program.config
+    shape, dtype = aval.shape if hasattr(aval, "shape") else (), None
+    if isinstance(aval, dict) or not hasattr(aval, "dtype"):
+        # cache pytree
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, l.dtype), aval)
+    dtype = aval.dtype
+    if name in ("tokens", "labels") and program.family == "lm":
+        hi = cfg.vocab
+        return jax.random.randint(key, shape, 0, hi, dtype=jnp.int32)
+    if name == "pos":
+        return jnp.asarray(2, jnp.int32)
+    if name == "edge_index":
+        n_nodes = program.input_avals["node_feats"].shape[0]
+        return jax.random.randint(key, shape, 0, n_nodes, dtype=jnp.int32)
+    if name == "labels":
+        if dtype == jnp.float32:
+            return jax.random.bernoulli(key, 0.5, shape).astype(jnp.float32)
+        n_classes = getattr(cfg, "n_classes", 2)
+        return jax.random.randint(key, shape, 0, n_classes, dtype=jnp.int32)
+    if name in ("edge_mask", "node_mask", "hist_mask"):
+        return jnp.ones(shape, jnp.float32)
+    if name == "field_ids":
+        return jax.random.randint(key, shape, 0, cfg.vocab, dtype=jnp.int32)
+    if name in ("hist_ids", "target_id"):
+        return jax.random.randint(key, shape, 0, cfg.item_vocab,
+                                  dtype=jnp.int32)
+    if name == "set_ids":
+        return jax.random.randint(key, shape, 0, 1 << cfg.minhash_s,
+                                  dtype=jnp.int32)
+    if name == "set_counts":
+        return jax.random.randint(key, shape, 1, cfg.set_nnz, dtype=jnp.int32)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jax.random.normal(key, shape, dtype)
+    return jnp.zeros(shape, dtype)

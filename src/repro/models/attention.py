@@ -1,0 +1,214 @@
+"""Attention variants: GQA (full/causal), chunked-local (llama4-style),
+MLA (DeepSeek multi-head latent), plus single-token decode paths.
+
+Training attention is *blockwise* (flash-style online softmax over KV
+blocks via ``lax.scan``) so score matrices never materialize beyond
+``(B, heads, q_blk, kv_blk)`` -- mandatory for the 32k-prefill dry-run
+cells to fit HBM.  The mask (causal / chunked-local) is computed from
+indices on the fly, never materialized at (S, S).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_idx: jax.Array, k_idx: jax.Array, window) -> jax.Array:
+    """(q_blk, kv_blk) validity. window: 0/None = causal full;
+    w > 0 = causal within chunk floor(idx/w) (llama4 chunked-local)."""
+    causal = k_idx[None, :] <= q_idx[:, None]
+    if window is None:
+        return causal
+    w = jnp.asarray(window, jnp.int32)
+    same_chunk = (k_idx[None, :] // jnp.maximum(w, 1)) == (
+        q_idx[:, None] // jnp.maximum(w, 1))
+    return jnp.where(w > 0, causal & same_chunk, causal)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window=None, q_offset: int = 0,
+                        blk_q: int = 1024, blk_kv: int = 1024) -> jax.Array:
+    """Causal (optionally chunked-local) attention with online softmax.
+
+    q: (B, Sq, Hq, hd);  k, v: (B, Skv, Hkv, hd) with Hq % Hkv == 0 (GQA).
+    window may be a traced scalar (0 = full causal) so heterogeneous layer
+    stacks can be scanned with a per-layer window value.
+    Returns (B, Sq, Hq, hd).
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    hd_v = v.shape[-1]                 # MLA: d_v may differ from d_qk
+    G = Hq // Hkv
+    scale = hd ** -0.5
+
+    blk_q = min(blk_q, Sq)
+    blk_kv = min(blk_kv, Skv)
+    nq, nkv = Sq // blk_q, Skv // blk_kv
+    assert Sq % blk_q == 0 and Skv % blk_kv == 0
+
+    # (B, nq, blk_q, Hkv, G, hd) -> scan over nq outer, nkv inner
+    qb = q.reshape(B, nq, blk_q, Hkv, G, hd)
+    kb = k.reshape(B, nkv, blk_kv, Hkv, hd)
+    vb = v.reshape(B, nkv, blk_kv, Hkv, hd_v)
+
+    def q_block(carry, qi):
+        q_i = qb[:, qi]                                # (B, bq, Hkv, G, hd)
+        q_idx = q_offset + qi * blk_q + jnp.arange(blk_q)
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            k_j = kb[:, ki]                            # (B, bk, Hkv, hd)
+            v_j = vb[:, ki]
+            k_idx = ki * blk_kv + jnp.arange(blk_kv)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_idx, k_idx, window)   # (bq, bk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, blk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, blk_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, blk_q, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, Hkv, G, bq, hd)
+        out = jnp.moveaxis(out, 3, 1)                  # (B, bq, Hkv, G, hd)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # outs: (nq, B, blk_q, Hkv, G, hd_v)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, hd_v)
+    return out
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window=None) -> jax.Array:
+    """One-token attention over a KV cache.
+
+    q: (B, Hq, hd); caches: (B, L, Hkv, hd); pos: () int32 -- number of
+    valid cache entries (the new token's K/V already written at pos-1).
+    ``window`` (traced scalar ok): > 0 restricts attention to the current
+    length-``window`` chunk (llama4 chunked-local); 0/None = full causal.
+    Returns (B, Hq, hd).
+    """
+    B, L, Hkv, hd = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(L)
+    valid = idx < pos
+    if window is not None:
+        w = jnp.maximum(jnp.asarray(window, jnp.int32), 1)
+        in_chunk = (idx // w) == ((pos - 1) // w)
+        valid = valid & jnp.where(jnp.asarray(window, jnp.int32) > 0,
+                                  in_chunk, True)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+
+def mla_prefill(x: jax.Array, p: dict, *, n_heads: int, d_nope: int,
+                d_rope: int, d_v: int, positions: jax.Array,
+                rope_theta: float, blk: int = 1024) -> jax.Array:
+    """MLA forward for training/prefill (decompressed K/V).
+
+    Params p: wdq (d, q_lora), wuq (q_lora, H*(d_nope+d_rope)),
+              wdkv (d, kv_lora), wukv (kv_lora, H*(d_nope+d_v)),
+              wkr (d, d_rope), q_norm (q_lora,), kv_norm (kv_lora,),
+              wo (H*d_v, d).
+    """
+    from repro.models.layers import apply_rope, rms_norm
+    B, S, D = x.shape
+    H = n_heads
+    cq = rms_norm(x @ p["wdq"], p["q_norm"])               # (B,S,q_lora)
+    q = (cq @ p["wuq"]).reshape(B, S, H, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = rms_norm(x @ p["wdkv"], p["kv_norm"])            # (B,S,kv_lora)
+    kv = (ckv @ p["wukv"]).reshape(B, S, H, d_nope + d_v)
+    k_nope, v = kv[..., :d_nope], kv[..., d_nope:]
+    k_rope = apply_rope((x @ p["wkr"])[:, :, None, :], positions,
+                        rope_theta)                        # (B,S,1,d_rope)
+
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kc = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, d_rope))], axis=-1)
+    out = blockwise_attention(qc, kc, v, blk_q=blk, blk_kv=blk)
+    return out.reshape(B, S, H * d_v) @ p["wo"]
+
+
+def mla_decode(x: jax.Array, p: dict, ckv_cache: jax.Array,
+               kr_cache: jax.Array, pos: jax.Array, *, n_heads: int,
+               d_nope: int, d_rope: int, d_v: int, rope_theta: float
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-weight MLA decode: attention runs in the compressed space.
+
+    The cache stores only (kv_lora + d_rope) per token (MLA's raison
+    d'etre).  W_uk is absorbed into the query, W_uv into the output:
+        score_h = (q_nope_h W_uk_h) . c_kv + q_rope_h . k_rope
+        out_h   = (sum_t a_t c_kv_t) W_uv_h
+    x: (B, D) one token. caches: (B, L, kv_lora), (B, L, d_rope).
+    Returns (attn_out (B, D), new ckv_cache, new kr_cache).
+    """
+    from repro.models.layers import apply_rope, rms_norm
+    B, D = x.shape
+    H = n_heads
+    L = ckv_cache.shape[1]
+    kv_lora = ckv_cache.shape[2]
+
+    cq = rms_norm(x @ p["wdq"], p["q_norm"])
+    q = (cq @ p["wuq"]).reshape(B, H, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope[:, None], (pos - 1)[None],
+                        rope_theta)[:, 0]                   # (B,H,d_rope)
+
+    ckv_new = rms_norm(x @ p["wdkv"], p["kv_norm"])         # (B, kv_lora)
+    kr_new = apply_rope((x @ p["wkr"])[:, None, None, :], (pos - 1)[None],
+                        rope_theta)[:, 0, 0]                # (B, d_rope)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, ckv_new[:, None], pos - 1, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new[:, None], pos - 1, axis=1)
+
+    # absorb W_uk: wukv is (kv_lora, H*(d_nope+d_v)); split per head
+    wukv = p["wukv"].reshape(kv_lora, H, d_nope + d_v)
+    w_uk = wukv[:, :, :d_nope]                              # (kv_lora, H, d_nope)
+    w_uv = wukv[:, :, d_nope:]                              # (kv_lora, H, d_v)
+    q_c = jnp.einsum("bhn,chn->bhc", q_nope, w_uk)          # (B, H, kv_lora)
+
+    scale = (d_nope + d_rope) ** -0.5
+    s = (jnp.einsum("bhc,blc->bhl", q_c, ckv_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,blr->bhl", q_rope, kr_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(L) < pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhl,blc->bhc", a.astype(ckv_cache.dtype), ckv_cache,
+                     preferred_element_type=jnp.float32)    # (B, H, kv_lora)
+    o = jnp.einsum("bhc,chv->bhv", o_c.astype(x.dtype), w_uv)  # (B, H, d_v)
+    out = o.reshape(B, H * d_v) @ p["wo"]
+    return out, ckv_cache, kr_cache

@@ -1,0 +1,206 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553 / benchmark config
+arXiv:2003.00982) with edge gates, via segment_sum message passing.
+
+JAX has no CSR SpMM; message passing is built from first principles:
+per-edge messages + ``jax.ops.segment_sum`` scatter into destination
+nodes.  That scatter IS the system's GNN kernel (see kernel_taxonomy §GNN).
+
+Layer (residual, batch-norm-free variant with RMS norm for TPU):
+    e'_ij = A h_i + B h_j + C e_ij
+    eta_ij = sigmoid(e'_ij) / (sum_j' sigmoid(e'_ij') + eps)
+    h'_i  = h_i + ReLU(norm(U h_i + sum_j eta_ij * (V h_j)))
+    e_ij  <- e_ij + ReLU(norm(e'_ij))
+
+Supports full-batch graphs (cora / ogbn-products scale) and sampled
+minibatch subgraphs from the fanout neighbor sampler below.  Edges are
+padded to a fixed count with a validity mask (TPU static shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rms_norm
+from repro.sharding.rules import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    arch_id: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int
+    aggregator: str = "gated"
+    readout: str = "node"        # "node" | "graph" (mean-pool per graph id)
+    param_dtype: object = jnp.float32
+    remat: bool = False
+
+
+def init_gnn_params(cfg: GNNConfig, key: jax.Array):
+    dtype = cfg.param_dtype
+    k_in, k_e, k_layers, k_out = jax.random.split(key, 4)
+    d = cfg.d_hidden
+
+    def layer_init(k):
+        ks = jax.random.split(k, 5)
+        s = d ** -0.5
+        return {"A": normal_init(ks[0], (d, d), s, dtype),
+                "B": normal_init(ks[1], (d, d), s, dtype),
+                "C": normal_init(ks[2], (d, d), s, dtype),
+                "U": normal_init(ks[3], (d, d), s, dtype),
+                "V": normal_init(ks[4], (d, d), s, dtype),
+                "ln_h": jnp.ones((d,), dtype),
+                "ln_e": jnp.ones((d,), dtype)}
+
+    return {
+        "embed_in": normal_init(k_in, (cfg.d_in, d), cfg.d_in ** -0.5, dtype),
+        "embed_edge": normal_init(k_e, (1, d), 1.0, dtype),
+        "layers": jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers)),
+        "out": normal_init(k_out, (d, cfg.n_classes), d ** -0.5, dtype),
+    }
+
+
+def gnn_param_shapes(cfg: GNNConfig):
+    return jax.eval_shape(partial(init_gnn_params, cfg), jax.random.PRNGKey(0))
+
+
+def gatedgcn_layer(p, h, e, src, dst, edge_mask, n_nodes: int):
+    """One GatedGCN layer. h: (N, d); e: (E, d); src/dst: (E,) int32."""
+    h_src = jnp.take(h, src, axis=0)
+    h_dst = jnp.take(h, dst, axis=0)
+    e_new = h_dst @ p["A"] + h_src @ p["B"] + e @ p["C"]      # (E, d)
+    gate = jax.nn.sigmoid(e_new) * edge_mask[:, None]
+    gate_sum = jax.ops.segment_sum(gate, dst, num_segments=n_nodes)
+    eta = gate / (jnp.take(gate_sum, dst, axis=0) + 1e-6)     # (E, d)
+    msg = eta * (h_src @ p["V"]) * edge_mask[:, None]
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes) # (N, d)
+    h = h + jax.nn.relu(rms_norm(h @ p["U"] + agg, p["ln_h"]))
+    e = e + jax.nn.relu(rms_norm(e_new, p["ln_e"]))
+    return h, e
+
+
+def gnn_forward(params, batch: dict, cfg: GNNConfig) -> jax.Array:
+    """batch: node_feats (N, d_in), edge_index (2, E) int32,
+    edge_mask (E,) float, [node_mask (N,)].  Returns logits (N, classes)."""
+    feats = constrain(batch["node_feats"], None, None)
+    h = feats @ params["embed_in"]
+    E = batch["edge_index"].shape[1]
+    e = jnp.broadcast_to(params["embed_edge"], (E, cfg.d_hidden))
+    # edges are row-parallel: shard over EVERY mesh axis (256/512-way)
+    e = constrain(e, "all", None)
+    src, dst = batch["edge_index"][0], batch["edge_index"][1]
+    src = constrain(src, "all")
+    dst = constrain(dst, "all")
+    edge_mask = batch["edge_mask"].astype(h.dtype)
+    n_nodes = h.shape[0]
+
+    layer = gatedgcn_layer
+    if cfg.remat:
+        layer = jax.checkpoint(layer, static_argnums=(6,))
+
+    def body(carry, p):
+        h, e = carry
+        # Perf iteration (EXPERIMENTS.md §Perf/gatedgcn): node tensors
+        # sharded over the data axes (replicating them makes every chip
+        # run the full N*d^2 matmuls and psum whole node tables per
+        # layer); edge tensors sharded over all axes (their per-layer
+        # stash dominated HBM at ogbn-products scale).
+        h = constrain(h, "batch", None)
+        e = constrain(e, "all", None)
+        h, e = layer(p, h, e, src, dst, edge_mask, n_nodes)
+        return (constrain(h, "batch", None), constrain(e, "all", None)), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    if cfg.readout == "graph":
+        # mean-pool nodes into per-graph embeddings (batched small graphs)
+        gids = batch["graph_ids"]
+        n_graphs = batch["labels"].shape[0]
+        nm = batch["node_mask"].astype(h.dtype)
+        sums = jax.ops.segment_sum(h * nm[:, None], gids,
+                                   num_segments=n_graphs)
+        cnt = jax.ops.segment_sum(nm, gids, num_segments=n_graphs)
+        h = sums / jnp.maximum(cnt, 1.0)[:, None]
+    return h @ params["out"]
+
+
+def gnn_loss(params, batch: dict, cfg: GNNConfig) -> jax.Array:
+    """Cross-entropy: masked node classification, or per-graph readout."""
+    logits = gnn_forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if cfg.readout == "graph":
+        return jnp.mean(nll)
+    mask = batch["node_mask"].astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Fanout neighbor sampler (GraphSAGE-style, for minibatch_lg)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Compressed neighbor lists on device."""
+    indptr: jax.Array     # (N+1,) int32
+    indices: jax.Array    # (nnz,) int32
+
+
+def neighbor_sample(key: jax.Array, graph: CSRGraph, seeds: jax.Array,
+                    fanouts: Tuple[int, ...]) -> dict:
+    """Layer-wise uniform fanout sampling (with replacement).
+
+    Returns a fixed-shape padded subgraph:
+      nodes   (n_sub,) int32 -- [seeds, hop-1 samples, hop-2 samples, ...]
+      edge_index (2, n_edges) int32 indices into `nodes`
+      edge_mask  (n_edges,) bool (False for padded/self-loop fill)
+    Sampling with replacement keeps shapes static (real systems do the
+    same for TPU); duplicate edges are legitimate SAGE-style samples.
+    """
+    frontier = seeds
+    all_nodes = [seeds]
+    srcs, dsts, masks = [], [], []
+    offset = 0
+    for hop, fanout in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        deg = jnp.take(graph.indptr, frontier + 1) - jnp.take(graph.indptr,
+                                                              frontier)
+        r = jax.random.randint(sub, (frontier.shape[0], fanout), 0, 1 << 30)
+        pick = r % jnp.maximum(deg[:, None], 1)
+        nbr = jnp.take(graph.indices,
+                       jnp.take(graph.indptr, frontier)[:, None] + pick,
+                       mode="clip")                       # (F, fanout)
+        valid = (deg > 0)[:, None] & jnp.ones_like(pick, bool)
+        new_offset = offset + frontier.shape[0]
+        # edges: sampled neighbor (src) -> frontier node (dst)
+        src_local = new_offset + jnp.arange(frontier.shape[0] * fanout)
+        dst_local = jnp.repeat(offset + jnp.arange(frontier.shape[0]), fanout)
+        srcs.append(src_local)
+        dsts.append(dst_local)
+        masks.append(valid.reshape(-1))
+        all_nodes.append(nbr.reshape(-1))
+        frontier = nbr.reshape(-1)
+        offset = new_offset
+    nodes = jnp.concatenate(all_nodes)
+    return {
+        "nodes": nodes,
+        "edge_index": jnp.stack([jnp.concatenate(srcs),
+                                 jnp.concatenate(dsts)]).astype(jnp.int32),
+        "edge_mask": jnp.concatenate(masks),
+    }
+
+
+def subgraph_sizes(n_seeds: int, fanouts: Tuple[int, ...]) -> Tuple[int, int]:
+    """(n_sub_nodes, n_sub_edges) for the fixed-shape sampled subgraph."""
+    n_nodes, n_edges, frontier = n_seeds, 0, n_seeds
+    for f in fanouts:
+        n_edges += frontier * f
+        frontier *= f
+        n_nodes += frontier
+    return n_nodes, n_edges

@@ -1,0 +1,71 @@
+"""Shared neural-net building blocks (pure functional, dict params)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * weight
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dtype) * weight + bias
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def mlp(x: jax.Array, weights: Sequence[jax.Array],
+        biases: Sequence[jax.Array], act=jax.nn.relu,
+        final_act: bool = False) -> jax.Array:
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        x = x @ w + b
+        if i < len(weights) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_mlp(key, dims: Sequence[int], dtype=jnp.float32):
+    ws, bs = [], []
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, kk in enumerate(keys):
+        fan_in = dims[i]
+        ws.append(normal_init(kk, (dims[i], dims[i + 1]),
+                              scale=fan_in ** -0.5, dtype=dtype))
+        bs.append(jnp.zeros((dims[i + 1],), dtype))
+    return {"w": ws, "b": bs}
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """Rotary embedding on the last dim. x: (..., S, H, hd), positions: (S,)
+    or broadcastable to x's sequence axis (-3)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

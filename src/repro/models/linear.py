@@ -1,0 +1,176 @@
+"""Linear SVM and logistic regression on b-bit-hashed features.
+
+The paper's learning layer (§1.2, §5, §6):
+
+  * L2-regularized linear SVM (Eq. 6) and logistic regression (Eq. 7),
+  * operating on the Eq.(5) expansion of k b-bit signatures -- implemented
+    *implicitly*: the weight vector w lives in (k * 2^b,) and the forward
+    pass is the signature embedding-bag ``sum_j w[j * 2^b + z_j]``
+    (``repro.kernels.sigbag`` with d = 1), never materializing one-hots,
+  * also usable on dense features (VW-hashed vectors, original data) for
+    the paper's baselines.
+
+Feature scaling: as in [27], each expanded vector has exactly k ones, so
+we scale by 1/sqrt(k) to unit-norm the features (keeps C comparable
+across k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bbit import expand_tokens
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LinearModel:
+    w: jax.Array                     # (dim,) float32
+    bias: jax.Array                  # () float32
+
+    @staticmethod
+    def create(dim: int, dtype=jnp.float32) -> "LinearModel":
+        return LinearModel(w=jnp.zeros((dim,), dtype), bias=jnp.zeros((), dtype))
+
+
+def hashed_margin(model: LinearModel, sig_b: jax.Array, b: int) -> jax.Array:
+    """w . phi(x) for the implicit Eq.(5) expansion; (n,) scores."""
+    k = sig_b.shape[-1]
+    tok = expand_tokens(sig_b, b)                      # (n, k)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
+    return jnp.sum(model.w[tok], axis=-1) * scale + model.bias
+
+
+def dense_margin(model: LinearModel, x: jax.Array) -> jax.Array:
+    return x @ model.w + model.bias
+
+
+def svm_objective(margins: jax.Array, y: jax.Array, w: jax.Array,
+                  C: float) -> jax.Array:
+    """Eq. (6): (1/2)||w||^2 + C sum max(1 - y m, 0) (sum over batch)."""
+    hinge = jnp.maximum(1.0 - y * margins, 0.0)
+    return 0.5 * jnp.sum(w * w) + C * jnp.sum(hinge)
+
+def logistic_objective(margins: jax.Array, y: jax.Array, w: jax.Array,
+                       C: float) -> jax.Array:
+    """Eq. (7): (1/2)||w||^2 + C sum log(1 + exp(-y m))."""
+    # log1p(exp(-z)) computed stably via softplus(-z)
+    return 0.5 * jnp.sum(w * w) + C * jnp.sum(jax.nn.softplus(-y * margins))
+
+
+def make_loss_fn(kind: str, feature_kind: str, b: int, C: float
+                 ) -> Callable[[LinearModel, jax.Array, jax.Array], jax.Array]:
+    """Loss(model, features, y). feature_kind: 'hashed' | 'dense'."""
+    obj = svm_objective if kind == "svm" else logistic_objective
+
+    def loss(model: LinearModel, feats: jax.Array, y: jax.Array) -> jax.Array:
+        m = (hashed_margin(model, feats, b) if feature_kind == "hashed"
+             else dense_margin(model, feats))
+        # normalize the data term by batch size so C matches the paper's
+        # per-example weighting under mini-batching
+        n = y.shape[0]
+        return obj(m, y, model.w, C) / n
+
+    return loss
+
+
+def accuracy(model: LinearModel, feats: jax.Array, y: jax.Array, *,
+             feature_kind: str, b: int = 0) -> jax.Array:
+    m = (hashed_margin(model, feats, b) if feature_kind == "hashed"
+         else dense_margin(model, feats))
+    return jnp.mean((jnp.sign(m) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Bottou-style online SGD SVM (§6, Eq. 11-12)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SGDState:
+    model: LinearModel
+    t: jax.Array                     # step counter (float for the lr schedule)
+    avg_w: jax.Array                 # ASGD running average
+    avg_bias: jax.Array
+    avg_start: float                 # step at which averaging starts
+
+
+def sgd_svm_init(dim: int, avg_start: float = 0.0) -> SGDState:
+    m = LinearModel.create(dim)
+    return SGDState(model=m, t=jnp.zeros(()), avg_w=jnp.zeros_like(m.w),
+                    avg_bias=jnp.zeros(()), avg_start=avg_start)
+
+
+def sgd_svm_step(state: SGDState, feats: jax.Array, y: jax.Array, *,
+                 lam: float, eta0: float, b: int, feature_kind: str = "hashed",
+                 kind: str = "svm", average: bool = False) -> SGDState:
+    """One mini-batch SGD update with Bottou's 1/(1 + lam*eta0*t) schedule.
+
+    Implements Eq. (12): w <- w - eta_t * (lam w - [margin violators] y x),
+    with the per-example gradient averaged over the mini-batch (batch size 1
+    reproduces the paper exactly).  ``average=True`` maintains the ASGD
+    (Wei Xu / Bottou averaged-SGD, §6.3) iterate average.
+    """
+    model = state.model
+    eta = eta0 / (1.0 + lam * eta0 * state.t)
+
+    def data_grad(mod: LinearModel) -> Tuple[jax.Array, jax.Array]:
+        if feature_kind == "hashed":
+            m = hashed_margin(mod, feats, b)
+        else:
+            m = dense_margin(mod, feats)
+        if kind == "svm":
+            coef = jnp.where(y * m < 1.0, -y, 0.0)          # dL/dm
+        else:
+            coef = -y * jax.nn.sigmoid(-y * m)
+        coef = coef / y.shape[0]
+        if feature_kind == "hashed":
+            k = feats.shape[-1]
+            tok = expand_tokens(feats, b)
+            scale = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
+            gw = jnp.zeros_like(mod.w).at[tok].add(
+                jnp.broadcast_to(coef[:, None] * scale, tok.shape))
+        else:
+            gw = feats.T @ coef
+        return gw, jnp.sum(coef)
+
+    gw, gb = data_grad(model)
+    new_w = model.w - eta * (lam * model.w + gw)
+    new_b = model.bias - eta * gb
+    new_t = state.t + 1.0
+
+    if average:
+        # polynomial-decay averaging from avg_start onwards
+        mu = 1.0 / jnp.maximum(1.0, new_t - state.avg_start)
+        take = (new_t > state.avg_start).astype(jnp.float32)
+        avg_w = state.avg_w + take * mu * (new_w - state.avg_w)
+        avg_b = state.avg_bias + take * mu * (new_b - state.avg_bias)
+    else:
+        avg_w, avg_b = state.avg_w, state.avg_bias
+
+    return SGDState(model=LinearModel(w=new_w, bias=new_b), t=new_t,
+                    avg_w=avg_w, avg_bias=avg_b, avg_start=state.avg_start)
+
+
+def asgd_model(state: SGDState) -> LinearModel:
+    """The averaged iterate (falls back to the last iterate pre-averaging)."""
+    started = state.t > state.avg_start
+    w = jnp.where(started, state.avg_w, state.model.w)
+    bias = jnp.where(started, state.avg_bias, state.model.bias)
+    return LinearModel(w=w, bias=bias)
+
+
+def calibrate_eta0(loss_at_eta: Callable[[float], float],
+                   etas=(2.0 ** p for p in range(-8, 4))) -> float:
+    """Bottou-style eta0 calibration on a small data subset: pick the eta
+    with the lowest one-pass loss."""
+    best, best_loss = None, float("inf")
+    for eta in etas:
+        l = float(loss_at_eta(float(eta)))
+        if l < best_loss:
+            best, best_loss = float(eta), l
+    return best

@@ -1,0 +1,302 @@
+"""RecSys architectures: Wide&Deep, AutoInt, DIN, MIND -- on top of a
+from-scratch EmbeddingBag (jnp.take + segment-sum; JAX has no native one),
+with the paper's b-bit minwise hashing as an optional *hashed frontend*.
+
+Hashed frontend (the paper's technique as a first-class feature): each
+example carries a large sparse binary set (user behavior / n-gram
+features).  Instead of a 10^9-row embedding table, the set is minhashed
+into k b-bit signatures (repro.core / repro.kernels) and embedded by the
+Eq.(5) signature embedding-bag: sum_j Table[j, z_j] with Table of shape
+(k, 2^b, d).  This reduces the embedding storage from O(D d) to
+O(k 2^b d) and the lookup from O(nnz) to O(k) -- precisely the paper's
+data-reduction argument transplanted from linear models to embeddings.
+
+All ID inputs are single-valued per field (standard Criteo-style layout);
+the multi-hot path goes through the hashed frontend.  Embedding tables are
+row-sharded over the ``model`` mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bbit import expand_tokens
+from repro.kernels import ref as kref
+from repro.models.layers import init_mlp, mlp, normal_init, rms_norm
+from repro.sharding.rules import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    arch_id: str
+    interaction: str             # "concat" | "self-attn" | "target-attn" | "multi-interest"
+    n_fields: int                # single-valued categorical fields
+    vocab: int                   # rows per field table
+    embed_dim: int
+    mlp_dims: Tuple[int, ...] = ()
+    # AutoInt
+    n_attn_layers: int = 0
+    n_attn_heads: int = 0
+    d_attn: int = 0
+    # DIN / MIND (behavior-sequence models)
+    seq_len: int = 0
+    attn_mlp_dims: Tuple[int, ...] = ()
+    n_interests: int = 0
+    capsule_iters: int = 0
+    item_vocab: int = 0
+    # paper integration: minhash-hashed set-valued feature
+    use_minhash_frontend: bool = False
+    minhash_k: int = 64
+    minhash_b: int = 8
+    minhash_s: int = 24          # original set universe D = 2^s
+    set_nnz: int = 128           # padded nnz of the raw sparse set
+    param_dtype: Any = jnp.float32
+
+
+@functools.lru_cache(maxsize=None)
+def _minhash_coeffs(arch_id: str, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic non-trainable 2U coefficients (buffers, not params)."""
+    rng = np.random.default_rng(abs(hash((arch_id, k))) % (2**31))
+    a1 = rng.integers(0, 2**32, k, dtype=np.uint32)
+    a2 = (rng.integers(0, 2**32, k, dtype=np.uint32) | 1).astype(np.uint32)
+    return a1, a2
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (built from scratch: JAX has no nn.EmbeddingBag)
+# ---------------------------------------------------------------------------
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Single-hot per-field lookup. table: (F, V, d); ids: (B, F) -> (B, F, d)."""
+    F = table.shape[0]
+    out = jnp.take_along_axis(
+        jnp.moveaxis(table, 0, 0)[None],           # (1, F, V, d)
+        ids[:, :, None, None].astype(jnp.int32), axis=2)[:, :, 0, :]
+    return out
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                  combiner: str = "sum") -> jax.Array:
+    """Multi-hot bag over one table. table: (V, d); ids/mask: (B, L) -> (B, d)."""
+    gathered = jnp.take(table, ids.astype(jnp.int32), axis=0)   # (B, L, d)
+    gathered = gathered * mask[..., None].astype(gathered.dtype)
+    out = jnp.sum(gathered, axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return out
+
+
+def minhash_frontend(params: dict, set_ids: jax.Array, set_counts: jax.Array,
+                     cfg: RecsysConfig) -> jax.Array:
+    """Sparse set -> k b-bit signatures -> signature embedding-bag (B, d).
+
+    Inside the training graph this is the pure-jnp reference path (the
+    Pallas kernel serves the preprocessing pipeline); both compute
+    identical values (tests assert so).
+    """
+    a1, a2 = _minhash_coeffs(cfg.arch_id, cfg.minhash_k)
+    sig = kref.minhash2u_ref(set_ids, set_counts.reshape(-1, 1),
+                             jnp.asarray(a1), jnp.asarray(a2),
+                             s=cfg.minhash_s, b=cfg.minhash_b)
+    return kref.sigbag_ref(sig.astype(jnp.int32), params["minhash_table"])
+
+
+# ---------------------------------------------------------------------------
+# Parameter init per architecture
+# ---------------------------------------------------------------------------
+
+def init_recsys_params(cfg: RecsysConfig, key: jax.Array):
+    dtype = cfg.param_dtype
+    d = cfg.embed_dim
+    ks = iter(jax.random.split(key, 16))
+    p: Dict[str, Any] = {}
+    if cfg.n_fields:
+        p["tables"] = normal_init(next(ks), (cfg.n_fields, cfg.vocab, d),
+                                  0.01, dtype)
+    if cfg.interaction == "concat":           # wide & deep
+        p["wide"] = normal_init(next(ks), (cfg.n_fields, cfg.vocab, 1),
+                                0.01, dtype)
+        p["deep"] = init_mlp(next(ks),
+                             (cfg.n_fields * d + (d if cfg.use_minhash_frontend else 0),)
+                             + cfg.mlp_dims + (1,), dtype)
+    elif cfg.interaction == "self-attn":      # autoint
+        n_f = cfg.n_fields + (1 if cfg.use_minhash_frontend else 0)
+        layers = []
+        d_in = d
+        for _ in range(cfg.n_attn_layers):
+            kq, kk, kv, kr = jax.random.split(next(ks), 4)
+            h = cfg.n_attn_heads
+            da = cfg.d_attn
+            layers.append({
+                "wq": normal_init(kq, (d_in, h * da), d_in ** -0.5, dtype),
+                "wk": normal_init(kk, (d_in, h * da), d_in ** -0.5, dtype),
+                "wv": normal_init(kv, (d_in, h * da), d_in ** -0.5, dtype),
+                "wres": normal_init(kr, (d_in, h * da), d_in ** -0.5, dtype),
+            })
+            d_in = cfg.n_attn_heads * cfg.d_attn
+        p["attn_layers"] = layers
+        p["head"] = init_mlp(next(ks), (n_f * d_in, 1), dtype)
+    elif cfg.interaction == "target-attn":    # din
+        p["item_table"] = normal_init(next(ks), (cfg.item_vocab, d), 0.01,
+                                      dtype)
+        p["attn_mlp"] = init_mlp(next(ks), (4 * d,) + cfg.attn_mlp_dims + (1,),
+                                 dtype)
+        d_extra = d if cfg.use_minhash_frontend else 0
+        p["head"] = init_mlp(next(ks), (3 * d + d_extra,) + cfg.mlp_dims + (1,),
+                             dtype)
+    elif cfg.interaction == "multi-interest":  # mind
+        p["item_table"] = normal_init(next(ks), (cfg.item_vocab, d), 0.01,
+                                      dtype)
+        p["S"] = normal_init(next(ks), (d, d), d ** -0.5, dtype)
+        p["head"] = init_mlp(next(ks), (d, d), dtype)
+    else:
+        raise ValueError(cfg.interaction)
+    if cfg.use_minhash_frontend:
+        p["minhash_table"] = normal_init(
+            next(ks), (cfg.minhash_k, 1 << cfg.minhash_b, d), 0.01, dtype)
+    return p
+
+
+def recsys_param_shapes(cfg: RecsysConfig):
+    return jax.eval_shape(functools.partial(init_recsys_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _squash(x: jax.Array, axis: int = -1) -> jax.Array:
+    n2 = jnp.sum(jnp.square(x), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def recsys_logits(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """batch keys by arch:
+      all:          [set_ids (B, nnz), set_counts (B,)] if minhash frontend
+      concat/self-attn: field_ids (B, F)
+      target-attn/multi-interest: hist_ids (B, L), hist_mask (B, L),
+                                  target_id (B,)
+    Returns (B,) logits.
+    """
+    extra = None
+    if cfg.use_minhash_frontend:
+        extra = minhash_frontend(params, batch["set_ids"],
+                                 batch["set_counts"], cfg)      # (B, d)
+
+    if cfg.interaction == "concat":
+        ids = constrain(batch["field_ids"], "batch", None)
+        emb = embedding_lookup(params["tables"], ids)            # (B, F, d)
+        emb = constrain(emb, "batch", None, None)
+        wide = jnp.sum(embedding_lookup(params["wide"], ids)[..., 0], axis=1)
+        deep_in = emb.reshape(emb.shape[0], -1)
+        if extra is not None:
+            deep_in = jnp.concatenate([deep_in, extra], axis=-1)
+        deep = mlp(deep_in, params["deep"]["w"], params["deep"]["b"])[:, 0]
+        return wide + deep
+
+    if cfg.interaction == "self-attn":
+        ids = constrain(batch["field_ids"], "batch", None)
+        x = embedding_lookup(params["tables"], ids)              # (B, F, d)
+        if extra is not None:
+            x = jnp.concatenate([x, extra[:, None, :]], axis=1)
+        x = constrain(x, "batch", None, None)
+        h, da = cfg.n_attn_heads, cfg.d_attn
+        for lp in params["attn_layers"]:
+            B, F, d_in = x.shape
+            q = (x @ lp["wq"]).reshape(B, F, h, da)
+            k = (x @ lp["wk"]).reshape(B, F, h, da)
+            v = (x @ lp["wv"]).reshape(B, F, h, da)
+            s = jnp.einsum("bfhd,bghd->bhfg", q, k) / jnp.sqrt(float(da))
+            a = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, h * da)
+            x = jax.nn.relu(o + x @ lp["wres"])
+        flat = x.reshape(x.shape[0], -1)
+        return mlp(flat, params["head"]["w"], params["head"]["b"])[:, 0]
+
+    if cfg.interaction == "target-attn":
+        hist = embedding_bag_seq(params["item_table"], batch["hist_ids"])
+        tgt = jnp.take(params["item_table"], batch["target_id"], axis=0)
+        hist = constrain(hist, "batch", None, None)
+        B, L, d = hist.shape
+        t = jnp.broadcast_to(tgt[:, None, :], (B, L, d))
+        att_in = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+        scores = mlp(att_in, params["attn_mlp"]["w"],
+                     params["attn_mlp"]["b"])[..., 0]            # (B, L)
+        scores = jnp.where(batch["hist_mask"] > 0, scores, -1e9)
+        # DIN uses unnormalized sigmoid gates; softmax variant is standard too
+        w = jax.nn.softmax(scores, axis=-1)
+        user = jnp.einsum("bl,bld->bd", w, hist)
+        head_in = [user, tgt, user * tgt]
+        if extra is not None:
+            head_in.append(extra)
+        return mlp(jnp.concatenate(head_in, axis=-1), params["head"]["w"],
+                   params["head"]["b"])[:, 0]
+
+    if cfg.interaction == "multi-interest":
+        hist = embedding_bag_seq(params["item_table"], batch["hist_ids"])
+        tgt = jnp.take(params["item_table"], batch["target_id"], axis=0)
+        hist = constrain(hist, "batch", None, None)
+        B, L, d = hist.shape
+        K = cfg.n_interests
+        hS = hist @ params["S"]                                   # (B, L, d)
+        blog = jnp.zeros((B, L, K), jnp.float32)
+        mask = batch["hist_mask"].astype(jnp.float32)
+        interests = None
+        for _ in range(cfg.capsule_iters):
+            w = jax.nn.softmax(blog, axis=-1) * mask[..., None]
+            z = jnp.einsum("blk,bld->bkd", w, hS)
+            interests = _squash(z)
+            blog = blog + jnp.einsum("bld,bkd->blk", hS, interests)
+        interests = mlp(interests, params["head"]["w"], params["head"]["b"],
+                        act=jax.nn.relu, final_act=False)
+        la = jax.nn.softmax(
+            jnp.einsum("bkd,bd->bk", interests, tgt) * 2.0, axis=-1)
+        user = jnp.einsum("bk,bkd->bd", la, interests)
+        return jnp.einsum("bd,bd->b", user, tgt)
+
+    raise ValueError(cfg.interaction)
+
+
+def embedding_bag_seq(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """(V, d) x (B, L) -> (B, L, d) gather (the per-step bag)."""
+    return jnp.take(table, ids.astype(jnp.int32), axis=0)
+
+
+def recsys_loss(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """Binary logistic loss on {0, 1} labels."""
+    logits = recsys_logits(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jax.nn.softplus(-logits) + (1.0 - y) * logits)
+
+
+def serve_scores(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """Online/offline scoring: sigmoid(logits)."""
+    return jax.nn.sigmoid(recsys_logits(params, batch, cfg))
+
+
+def retrieval_scores(params, batch: dict, cfg: RecsysConfig,
+                     n_candidates: int) -> jax.Array:
+    """Score one query context against n_candidates items (retrieval_cand).
+
+    Sequence models (din/mind) compute the user representation once and
+    score all candidates; field models (autoint/wide-deep) broadcast the
+    user fields across the candidate axis (batched full scoring).
+    Returns (n_candidates,) scores.
+    """
+    if cfg.interaction in ("target-attn", "multi-interest"):
+        cand = jnp.arange(n_candidates, dtype=jnp.int32) % cfg.item_vocab
+        rep = {k: jnp.repeat(v, n_candidates, axis=0)
+               for k, v in batch.items() if k != "target_id"}
+        rep["target_id"] = cand
+        return recsys_logits(params, rep, cfg)
+    cand = jnp.arange(n_candidates, dtype=jnp.int32) % cfg.vocab
+    rep = {k: jnp.repeat(v, n_candidates, axis=0) for k, v in batch.items()}
+    rep["field_ids"] = rep["field_ids"].at[:, -1].set(cand)
+    return recsys_logits(params, rep, cfg)

@@ -1,0 +1,390 @@
+"""Decoder-only LM family: dense GQA, chunked-local (llama4-style), MLA,
+and MoE variants -- pure-functional JAX with scan-over-layers + remat.
+
+Covers the five assigned LM architectures.  Two entry points:
+
+  * ``train_loss(params, batch, cfg)``     -- next-token CE (chunked,
+    vocab-parallel: full fp32 logits are never materialized),
+  * ``serve_step(params, cache, tokens, pos, cfg)`` -- one decode step
+    over a KV cache (GQA cache or compressed MLA cache).
+
+Sharding is expressed through ``repro.sharding.rules.constrain`` with
+logical axes, so the same code runs unsharded in smoke tests and on the
+(pod, data, model) production mesh in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    mla_decode, mla_prefill)
+from repro.models.layers import apply_rope, normal_init, rms_norm, swiglu
+from repro.models.moe import MoEConfig, init_moe_params, moe_ffn
+from repro.sharding.rules import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    arch_id: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    attention: str = "gqa"            # "gqa" | "mla"
+    local_window: int = 0             # >0: chunked-local attention window
+    global_every: int = 4             # every Nth layer stays global
+    rope_theta: float = 10000.0
+    n_dense_layers: int = 0           # leading dense-FFN layers (MoE archs)
+    d_ff_dense: int = 0
+    moe: Optional[MoEConfig] = None
+    # MLA dims (attention == "mla")
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    ce_chunk: int = 2048
+    attn_blk: int = 1024
+    microbatch: int = 1          # gradient-accumulation splits per step
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic prefill (chunked-local attention)?"""
+        return self.local_window > 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: TransformerConfig, dtype):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s = d ** -0.5
+    if cfg.attention == "mla":
+        ks = jax.random.split(key, 6)
+        return {
+            "wdq": normal_init(ks[0], (d, cfg.q_lora), s, dtype),
+            "wuq": normal_init(ks[1], (cfg.q_lora, H * (cfg.qk_nope + cfg.qk_rope)),
+                               cfg.q_lora ** -0.5, dtype),
+            "wdkv": normal_init(ks[2], (d, cfg.kv_lora), s, dtype),
+            "wukv": normal_init(ks[3], (cfg.kv_lora, H * (cfg.qk_nope + cfg.v_head)),
+                                cfg.kv_lora ** -0.5, dtype),
+            "wkr": normal_init(ks[4], (d, cfg.qk_rope), s, dtype),
+            "wo": normal_init(ks[5], (H * cfg.v_head, d),
+                              (H * cfg.v_head) ** -0.5, dtype),
+            "q_norm": jnp.ones((cfg.q_lora,), dtype),
+            "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+        }
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": normal_init(ks[0], (d, H * hd), s, dtype),
+        "wk": normal_init(ks[1], (d, Hkv * hd), s, dtype),
+        "wv": normal_init(ks[2], (d, Hkv * hd), s, dtype),
+        "wo": normal_init(ks[3], (H * hd, d), (H * hd) ** -0.5, dtype),
+    }
+
+
+def _init_dense_ffn(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": normal_init(k1, (d, f), d ** -0.5, dtype),
+            "w_up": normal_init(k2, (d, f), d ** -0.5, dtype),
+            "w_down": normal_init(k3, (f, d), f ** -0.5, dtype)}
+
+
+def _init_layer(key, cfg: TransformerConfig, moe_layer: bool, dtype):
+    k1, k2 = jax.random.split(key)
+    ffn = (init_moe_params(k2, cfg.d_model, cfg.moe, dtype) if moe_layer
+           else _init_dense_ffn(k2, cfg.d_model,
+                                cfg.d_ff_dense or cfg.d_ff, dtype))
+    return {"attn": _init_attn(k1, cfg, dtype), "ffn": ffn,
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype)}
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array):
+    dtype = cfg.param_dtype
+    k_embed, k_out, k_dense, k_layers = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    params = {
+        "embed": normal_init(k_embed, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "out": normal_init(k_out, (cfg.d_model, cfg.vocab),
+                           cfg.d_model ** -0.5, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": jax.vmap(
+            lambda k: _init_layer(k, cfg, cfg.is_moe, dtype))(
+                jax.random.split(k_layers, n_scan)),
+    }
+    if cfg.n_dense_layers:
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, False, dtype))(
+                jax.random.split(k_dense, cfg.n_dense_layers))
+    return params
+
+
+def param_shapes(cfg: TransformerConfig):
+    """Shape-only init (no allocation) for the dry-run."""
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def count_params(cfg: TransformerConfig) -> int:
+    import math
+    shapes = param_shapes(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def count_active_params(cfg: TransformerConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts routed)."""
+    total = count_params(cfg)
+    if not cfg.is_moe:
+        return total
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    n_moe_layers = cfg.n_layers - cfg.n_dense_layers
+    per_expert = 3 * cfg.d_model * cfg.moe.d_ff
+    inactive = n_moe_layers * (E - k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_window(cfg: TransformerConfig, idx: jax.Array) -> jax.Array:
+    """Per-layer attention window: 0 = full causal."""
+    if cfg.local_window <= 0:
+        return jnp.int32(0)
+    is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.where(is_global, jnp.int32(0), jnp.int32(cfg.local_window))
+
+
+def _attn_block(p, x, cfg: TransformerConfig, positions, window):
+    B, S, D = x.shape
+    if cfg.attention == "mla":
+        return mla_prefill(x, p, n_heads=cfg.n_heads, d_nope=cfg.qk_nope,
+                           d_rope=cfg.qk_rope, d_v=cfg.v_head,
+                           positions=positions, rope_theta=cfg.rope_theta,
+                           blk=cfg.attn_blk)
+    # constrain on the fused head dim (always divisible), reshape after
+    q = constrain(x @ p["wq"], "batch", None, "model").reshape(
+        B, S, cfg.n_heads, cfg.head_dim)
+    k = constrain(x @ p["wk"], "batch", None, "model").reshape(
+        B, S, cfg.n_kv, cfg.head_dim)
+    v = constrain(x @ p["wv"], "batch", None, "model").reshape(
+        B, S, cfg.n_kv, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = blockwise_attention(q, k, v, window=window,
+                              blk_q=cfg.attn_blk, blk_kv=cfg.attn_blk)
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+def _ffn_block(p, x, cfg: TransformerConfig, moe_layer: bool):
+    B, S, D = x.shape
+    if moe_layer:
+        out = moe_ffn(p, x.reshape(B * S, D), cfg.moe).reshape(B, S, D)
+    else:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = constrain(h, "batch", None, "model")
+        out = h @ p["w_down"]
+    return out
+
+
+def _make_layer_fn(cfg: TransformerConfig, moe_layer: bool, positions):
+    def layer(x, p, idx):
+        window = _layer_window(cfg, idx)
+        # layer-boundary activations sharded on d_model over "model": the
+        # remat stash (the dominant HBM consumer) shards tp-ways; GSPMD
+        # all-gathers transiently inside the layer where needed.
+        x = constrain(x, "batch", None, "model")
+        x = x + _attn_block(p["attn"], rms_norm(x, p["ln1"]), cfg,
+                            positions, window)
+        x = x + _ffn_block(p["ffn"], rms_norm(x, p["ln2"]), cfg, moe_layer)
+        return constrain(x, "batch", None, "model")
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    return layer
+
+
+def forward(params, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """tokens (B, S) -> final hidden states (B, S, D)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    # gather output deliberately unsharded on d: constraining it on
+    # "model" makes XLA's vocab-partitioned-gather emit an invalid
+    # dynamic-slice (partitioner bug); the first layer reshards to the
+    # d-over-model layout one op later.
+    x = constrain(jnp.take(params["embed"], tokens, axis=0),
+                  "batch", None, None)
+
+    if cfg.n_dense_layers:
+        dense_fn = _make_layer_fn(cfg, False, positions)
+
+        def dense_body(x, inp):
+            p, idx = inp
+            return dense_fn(x, p, idx), None
+
+        x, _ = jax.lax.scan(dense_body, x,
+                            (params["dense_layers"],
+                             jnp.arange(cfg.n_dense_layers)))
+
+    layer_fn = _make_layer_fn(cfg, cfg.is_moe, positions)
+
+    def body(x, inp):
+        p, idx = inp
+        return layer_fn(x, p, idx), None
+
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    x, _ = jax.lax.scan(body, x, (params["layers"],
+                                  jnp.arange(cfg.n_dense_layers,
+                                             cfg.n_layers)))
+    return rms_norm(x, params["final_norm"])
+
+
+def chunked_ce_loss(x: jax.Array, w_out: jax.Array, labels: jax.Array,
+                    chunk: int) -> jax.Array:
+    """Vocab-parallel cross-entropy over sequence chunks.
+
+    Never materializes (B, S, V) fp32 logits: each (B, chunk, V) slice is
+    produced (vocab sharded on "model"), reduced, and discarded.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0
+
+    @jax.checkpoint   # recompute chunk logits in bwd: no f32 logits stash
+    def chunk_loss(x, labels, i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        ys = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = constrain(xs @ w_out, "batch", None, "model")
+        logits = logits.astype(jnp.float32)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        correct = jnp.take_along_axis(logits, ys[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - correct)
+
+    def body(acc, i):
+        return acc + chunk_loss(x, labels, i), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(n_chunks))
+    return total / (B * S)
+
+
+def train_loss(params, batch: dict, cfg: TransformerConfig) -> jax.Array:
+    """batch: {"tokens": (B, S) int32, "labels": (B, S) int32}."""
+    x = forward(params, batch["tokens"], cfg)
+    return chunked_ce_loss(x, params["out"], batch["labels"], cfg.ce_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    """KV cache pytree (all layers, stacked for scan)."""
+    dtype = dtype or cfg.param_dtype
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    if cfg.attention == "mla":
+        def mk(n):
+            return {"ckv": jnp.zeros((n, batch, max_len, cfg.kv_lora), dtype),
+                    "kr": jnp.zeros((n, batch, max_len, cfg.qk_rope), dtype)}
+    else:
+        def mk(n):
+            shape = (n, batch, max_len, cfg.n_kv, cfg.head_dim)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    cache = {"layers": mk(n_scan)}
+    if cfg.n_dense_layers:
+        cache["dense_layers"] = mk(cfg.n_dense_layers)
+    return cache
+
+
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int,
+                 dtype=None):
+    return jax.eval_shape(partial(init_cache, cfg, batch, max_len, dtype))
+
+
+def _decode_attn(p, x, cache_l, pos, cfg: TransformerConfig, window):
+    """x: (B, D); cache_l: this layer's cache dict (no layer axis)."""
+    B, D = x.shape
+    if cfg.attention == "mla":
+        out, ckv, kr = mla_decode(x, p, cache_l["ckv"], cache_l["kr"], pos,
+                                  n_heads=cfg.n_heads, d_nope=cfg.qk_nope,
+                                  d_rope=cfg.qk_rope, d_v=cfg.v_head,
+                                  rope_theta=cfg.rope_theta)
+        return out, {"ckv": ckv, "kr": kr}
+    q = (x @ p["wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(B, cfg.n_kv, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(B, cfg.n_kv, cfg.head_dim)
+    pos_ids = (pos - 1)[None]
+    q = apply_rope(q[:, None], pos_ids, cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos_ids, cfg.rope_theta)[:, 0]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], k[:, None], pos - 1, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], v[:, None], pos - 1, axis=1)
+    out = decode_attention(q, k_cache, v_cache, pos,
+                           window=window if cfg.local_window > 0 else None)
+    out = out.reshape(B, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _decode_stack(params_stack, cache_stack, x, pos, cfg, moe_layer,
+                  idx_offset):
+    def body(x, inp):
+        p, cache_l, idx = inp
+        window = _layer_window(cfg, idx)
+        h = rms_norm(x, p["ln1"])
+        attn_out, new_cache = _decode_attn(p["attn"], h, cache_l, pos, cfg,
+                                           window)
+        x = x + attn_out
+        h = rms_norm(x, p["ln2"])
+        if moe_layer:
+            x = x + moe_ffn(p["ffn"], h, cfg.moe)
+        else:
+            x = x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                           p["ffn"]["w_down"])
+        return x, new_cache
+
+    n = jax.tree_util.tree_leaves(params_stack)[0].shape[0]
+    x, new_caches = jax.lax.scan(
+        body, x, (params_stack, cache_stack, idx_offset + jnp.arange(n)))
+    return x, new_caches
+
+
+def serve_step(params, cache, tokens: jax.Array, pos: jax.Array,
+               cfg: TransformerConfig) -> Tuple[jax.Array, dict]:
+    """One greedy decode step.
+
+    tokens: (B,) int32 current tokens; pos: () int32 -- sequence position
+    of the *new* token + 1 (i.e. cache entries [0, pos) are valid after
+    this step).  Returns (next_tokens (B,), new cache).
+    """
+    x = constrain(jnp.take(params["embed"], tokens, axis=0), "batch", None)
+    new_cache = {}
+    if cfg.n_dense_layers:
+        x, nc = _decode_stack(params["dense_layers"], cache["dense_layers"],
+                              x, pos, cfg, False, 0)
+        new_cache["dense_layers"] = nc
+    x, nc = _decode_stack(params["layers"], cache["layers"], x, pos, cfg,
+                          cfg.is_moe, cfg.n_dense_layers)
+    new_cache["layers"] = nc
+    x = rms_norm(x, params["final_norm"])
+    logits = constrain(x @ params["out"], "batch", "model")
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, new_cache

@@ -1,0 +1,82 @@
+"""Minimal optimizer framework (optax-like, self-contained).
+
+An optimizer is a pair of pure functions:
+
+    init(params) -> state
+    update(grads, state, params) -> (updates, state)
+
+``apply_updates`` adds updates to params.  All optimizers are pytree-
+polymorphic and jit/pjit-safe; states shard like their params, so FSDP
+sharding of parameters automatically shards optimizer state (ZeRO).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    """Compose gradient transformations left-to-right."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_states = []
+        for t, s in zip(transforms, state):
+            grads, ns = t.update(grads, s, params)
+            new_states.append(ns)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def scale(factor: float) -> Optimizer:
+    return Optimizer(lambda p: (),
+                     lambda g, s, p: (jax.tree_util.tree_map(
+                         lambda x: x * factor, g), s))
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> Optimizer:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params):
+        lr = schedule(count)
+        return (jax.tree_util.tree_map(lambda g: -lr * g, grads), count + 1)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        leaves = jax.tree_util.tree_leaves(grads)
+        norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in leaves))
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return (jax.tree_util.tree_map(lambda g: g * factor, grads), state)
+
+    return Optimizer(lambda p: (), update)
+
+
+def add_decayed_weights(weight_decay: float) -> Optimizer:
+    def update(grads, state, params):
+        return (jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params),
+            state)
+
+    return Optimizer(lambda p: (), update)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time(eta0: float, lam: float):
+    """Bottou's SGD schedule: eta_t = eta0 / (1 + lam * eta0 * t)."""
+    return lambda count: eta0 / (1.0 + lam * eta0 * count.astype(jnp.float32))
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        # (c+1): step 0 must have a nonzero LR
+        warm = peak_lr * jnp.minimum(1.0, (c + 1.0) / max(warmup_steps, 1))
+        progress = jnp.clip((c - warmup_steps) /
+                            max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(c < warmup_steps, warm, peak_lr * cos)
+
+    return fn

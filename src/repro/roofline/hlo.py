@@ -1,0 +1,77 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective bytes;
+those are recovered by scanning the optimized HLO for all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops and
+summing their operand sizes (per the roofline spec).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# shapes like  bf16[128,4096]{1,0}  or f32[] ; tuples handled by findall
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <shape(s)> opcode(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+("
+    + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Total operand bytes moved by collectives (per device), by op kind.
+
+    Operand sizes are read from the *result* shape of each collective line
+    (for all-reduce in == out; for all-gather the result is the gathered
+    tensor -- an upper bound on wire bytes; for reduce-scatter the operand
+    side dominates, also captured since HLO prints operand shapes in the
+    call args; we take max(result, operands) per line as the traffic
+    proxy).
+    """
+    per_kind: Dict[str, int] = defaultdict(int)
+    count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue    # avoid double counting async start/done pairs
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        head, tail = line.split("(", 1)
+        result_bytes = sum(shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(head))
+        operand_bytes = sum(shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(tail))
+        per_kind[kind] += max(result_bytes, operand_bytes)
+        count[kind] += 1
+    total = sum(per_kind.values())
+    per_kind = dict(per_kind)
+    per_kind["_counts"] = dict(count)
+    return total, per_kind
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"=\s*\S+\s+{re.escape(opcode)}\(", hlo_text))

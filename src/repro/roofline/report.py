@@ -1,0 +1,73 @@
+"""Render experiments/dryrun.jsonl into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.roofline.report [--jsonl PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+
+def load(path):
+    recs = [json.loads(l) for l in open(path)]
+    # keep the LAST record per (arch, cell, mesh)
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["cell"], r["mesh"])] = r
+    return by_key
+
+
+def dryrun_table(by_key) -> str:
+    lines = [
+        "| arch | cell | mesh | status | mem/chip GiB | fits 16G HBM | "
+        "compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (a, c, m), r in sorted(by_key.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {a} | {c} | {m} | SKIP: {r['reason'][:40]}… "
+                         f"| – | – | – |")
+            continue
+        mem = r["memory"]["total_per_chip_bytes"] / 2**30
+        lines.append(
+            f"| {a} | {c} | {m} | ok | {mem:.2f} | "
+            f"{'yes' if r['memory']['fits_hbm'] else 'no*'} | "
+            f"{r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(by_key, mesh="16x16") -> str:
+    lines = [
+        "| arch | cell | compute ms | memory ms | collective ms | "
+        "bottleneck | useful FLOP frac | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, c, m), r in sorted(by_key.items()):
+        if m != mesh or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {a} | {c} | {rf['compute_s'] * 1e3:.2f} | "
+            f"{rf['memory_s'] * 1e3:.2f} | {rf['collective_s'] * 1e3:.2f} | "
+            f"{rf['bottleneck']} | {rf['useful_flop_frac']:.2f} | "
+            f"{rf['peak_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+    by_key = load(args.jsonl)
+    print("## Dry-run matrix\n")
+    print(dryrun_table(by_key))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(by_key, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(by_key, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Parameter / optimizer-state PartitionSpec trees per architecture family.
+
+LMs use FSDP+TP: the tensor-parallel ("model") axis shards heads / d_ff /
+vocab / experts; the FSDP ("data") axis shards the complementary matrix
+dim (ZeRO-3 -- optimizer state shards identically since it mirrors the
+param tree).  GNN params are tiny -> replicated.  RecSys embedding tables
+are row-sharded over "model".
+
+Specs are produced by *path+shape rules* against ``jax.eval_shape`` of the
+init function, so they always match the real pytree structure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(f"[{p.idx}]")
+        else:
+            keys.append(str(p))
+    return tuple(keys)
+
+
+def _norm_spec(spec: P, rank: int) -> Tuple:
+    t = tuple(spec) + (None,) * (rank - len(tuple(spec)))
+    return t[:rank]
+
+
+# -- LM rules ---------------------------------------------------------------
+
+_COL_PARALLEL = {"wq", "wk", "wv", "wdq", "wuq", "wdkv", "wukv", "wkr",
+                 "w_gate", "w_up"}          # (.., in, out): out -> model
+_ROW_PARALLEL = {"wo", "w_down"}            # (.., in, out): in -> model
+
+
+def lm_param_specs(shapes: Any) -> Any:
+    def rule(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1]
+        rank = len(leaf.shape)
+        in_layer_stack = any(k in ("layers", "dense_layers") for k in keys)
+        lead = (None,) if in_layer_stack else ()
+        if name == "embed":
+            # Vocab FSDP'd over the data axes only: XLA's partitioned
+            # gather/scatter for vocab-sharded tables is the one robust
+            # path (sharding d as well trips SPMD gather bugs for some
+            # (V, d) shapes, and a d-mismatched layout forces full
+            # replication of the (T, d) cotangent in the bwd scatter).
+            return P("data", None)
+        if name == "out":
+            return P(None, "model")     # vocab-parallel logits
+        if name in ("final_norm",):
+            return P()
+        if name == "router":
+            return P()           # replicated: shard_map EP needs it whole
+        in_moe_experts = rank == 4 or (rank == 3 and not in_layer_stack)
+        if in_moe_experts and name in (_COL_PARALLEL | _ROW_PARALLEL):
+            # EP group spans as many mesh axes as E divides into (matches
+            # models.moe.ep_layout): 256-expert models cover the whole
+            # ("model", "data") pod, 1 expert/chip, remaining d_ff FSDP
+            # over "pod"; small-E models keep E on "model" and FSDP d_ff
+            # over ("data", "pod").  Tuples are literal; the launcher
+            # greedy-drops axes that don't divide.
+            E = leaf.shape[1] if rank == 4 else leaf.shape[0]
+            if E % 256 == 0:
+                e_ax, f_ax = ("model", "data"), ("pod",)
+            else:
+                e_ax, f_ax = ("model",), ("data", "pod")
+            if name in _COL_PARALLEL:    # (L, E, d, f)
+                return P(None, e_ax, None, f_ax) if rank == 4 \
+                    else P(e_ax, None, f_ax)
+            return P(None, e_ax, f_ax, None) if rank == 4 \
+                else P(e_ax, f_ax, None)
+        if name in _COL_PARALLEL:
+            return P(*lead, "data", "model")
+        if name in _ROW_PARALLEL:
+            return P(*lead, "model", "data")
+        return P()               # norms and other vectors: replicated
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+# -- GNN rules --------------------------------------------------------------
+
+def gnn_param_specs(shapes: Any) -> Any:
+    return jax.tree_util.tree_map(lambda _: P(), shapes)
+
+
+# -- RecSys rules -----------------------------------------------------------
+
+def recsys_param_specs(shapes: Any) -> Any:
+    def rule(path, leaf):
+        name = _path_keys(path)[-1]
+        if name in ("tables", "wide", "minhash_table"):
+            return P(None, "model", None)
+        if name == "item_table":
+            return P("model", None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def param_specs_for(family: str, shapes: Any) -> Any:
+    return {"lm": lm_param_specs, "gnn": gnn_param_specs,
+            "recsys": recsys_param_specs}[family](shapes)
+
+
+# -- optimizer-state specs (mirror the param tree) ---------------------------
+
+def opt_state_specs(param_specs: Any, param_shapes: Any,
+                    opt_shapes: Any) -> Any:
+    """Derive opt-state specs: moments mirror their parameter's spec;
+    Adafactor's factored stats drop the corresponding dim; scalars
+    replicate."""
+    spec_by_path: Dict[Tuple[str, ...], Tuple] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(param_shapes)
+    spec_flat = jax.tree_util.tree_leaves(
+        param_specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat, spec_flat):
+        spec_by_path[_path_keys(path)] = _norm_spec(spec, len(leaf.shape))
+
+    def rule(path, leaf):
+        keys = _path_keys(path)
+        if keys and keys[0] in ("m", "v", "mu"):
+            rest = keys[1:]
+            if rest in spec_by_path:
+                return P(*spec_by_path[rest])
+            if rest and rest[-1] == "vr" and rest[:-1] in spec_by_path:
+                s = spec_by_path[rest[:-1]]
+                return P(*s[:-1])
+            if rest and rest[-1] == "vc" and rest[:-1] in spec_by_path:
+                s = spec_by_path[rest[:-1]]
+                return P(*(s[:-2] + s[-1:]))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, opt_shapes)

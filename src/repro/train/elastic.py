@@ -1,0 +1,38 @@
+"""Elastic scaling: move a checkpoint onto a different mesh.
+
+A checkpoint saved on an N-device mesh can be restored onto an M-device
+mesh (M != N): arrays are loaded on host and ``jax.device_put`` under the
+*new* shardings derived from the same logical sharding rules.  This is the
+standard elastic-rescale path (grow after capacity arrives, shrink around
+failed pods) -- the mesh shape is a pure runtime choice, never baked into
+the checkpoint.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.train import checkpoint as ckpt_lib
+
+
+def reshard_restore(ckpt_dir: str, template: Any,
+                    sharding_fn: Callable[[Any], Any],
+                    step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore ``template``-shaped state with shardings from sharding_fn.
+
+    ``sharding_fn(template) -> pytree of jax.sharding.Sharding`` evaluated
+    against the *new* mesh.  Works across device counts because the npz
+    checkpoint stores full (unsharded) arrays per host.
+    """
+    shardings = sharding_fn(template)
+    return ckpt_lib.restore(ckpt_dir, template, step=step,
+                            shardings=shardings)
+
+
+def replicate_shardings(template: Any, mesh) -> Any:
+    """All-replicated shardings (the trivially correct fallback)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    rep = NamedSharding(mesh, PartitionSpec())
+    return jax.tree_util.tree_map(lambda _: rep, template)

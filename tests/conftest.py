@@ -1,0 +1,12 @@
+"""Test session setup: 8 host devices for sharding/shard_map tests.
+
+NOTE: the multi-pod dry-run uses 512 devices but sets that itself in
+repro.launch.dryrun (never globally); tests use a small count so smoke
+tests and collective tests can coexist.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in os.environ["XLA_FLAGS"]:
+    os.environ["XLA_FLAGS"] += " --xla_force_host_platform_device_count=8"

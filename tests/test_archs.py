@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config, one step, shapes + finite."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_archs, cells_for, is_skipped
+from repro.launch.steps import build_cell, init_inputs
+
+CASES = [(a, c.name) for a in sorted(all_archs())
+         for c in cells_for(a) if not is_skipped(a, c.name)]
+
+
+@pytest.mark.parametrize("arch_id,cell_name", CASES,
+                         ids=[f"{a}-{c}" for a, c in CASES])
+def test_cell_smoke(arch_id, cell_name):
+    key = jax.random.PRNGKey(0)
+    prog = build_cell(arch_id, cell_name, smoke=True)
+    params = prog.init_params(key)
+    inputs = init_inputs(prog, key)
+    if prog.opt_avals is not None:
+        opt_state = prog.optimizer.init(params)
+        p2, o2, loss = jax.jit(prog.step)(params, opt_state, inputs)
+        assert jnp.isfinite(loss), f"loss not finite: {loss}"
+        # params actually changed
+        changed = any(
+            not jnp.array_equal(a, b)
+            for a, b in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(p2))
+            if jnp.issubdtype(a.dtype, jnp.floating))
+        assert changed, "train step did not update params"
+    else:
+        out = jax.jit(prog.step)(params, inputs)
+        for leaf in jax.tree_util.tree_leaves(out):
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+def test_skipped_cells_documented():
+    skipped = [(a, c) for a in sorted(all_archs()) for c in
+               [cc.name for cc in cells_for(a)] if is_skipped(a, c)]
+    # exactly the four pure-full-attention long_500k cells
+    assert sorted(skipped) == [
+        ("deepseek-7b", "long_500k"),
+        ("deepseek-v3-671b", "long_500k"),
+        ("mistral-large-123b", "long_500k"),
+        ("yi-34b", "long_500k"),
+    ]
+
+
+def test_lm_param_counts_match_published():
+    from repro.models.transformer import count_params, count_active_params
+    from repro.configs import get_arch
+    expect = {
+        "deepseek-7b": (6.9e9, 0.1),
+        "yi-34b": (34.4e9, 0.1),
+        "mistral-large-123b": (122.6e9, 0.1),
+        "deepseek-v3-671b": (671e9, 0.02),
+        "llama4-scout-17b-a16e": (108e9, 0.1),
+    }
+    for arch, (n, tol) in expect.items():
+        got = count_params(get_arch(arch).config)
+        assert abs(got - n) / n < tol, (arch, got, n)
+    active = count_active_params(get_arch("deepseek-v3-671b").config)
+    assert abs(active - 37e9) / 37e9 < 0.1, active
+
+
+def test_decode_cache_is_updated():
+    """serve_step writes K/V at pos-1 and returns tokens."""
+    prog = build_cell("yi-34b", "decode_32k", smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = prog.init_params(key)
+    inputs = init_inputs(prog, key)
+    toks, new_cache = jax.jit(prog.step)(params, inputs)
+    assert toks.shape == inputs["tokens"].shape
+    k_before = inputs["cache"]["layers"]["k"]
+    k_after = new_cache["layers"]["k"]
+    assert not jnp.array_equal(k_before, k_after)
+    # only position pos-1 == 1 written
+    diff = jnp.any(k_before != k_after, axis=(0, 1, 3, 4))
+    assert bool(diff[1]) and not bool(jnp.any(diff[2:]))
+
+
+def test_moe_routes_to_multiple_experts():
+    from repro.models.moe import MoEConfig, init_moe_params, moe_ffn
+    cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, n_shared=1)
+    params = init_moe_params(jax.random.PRNGKey(0), 32, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    out = moe_ffn(params, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # gradient flows
+    g = jax.grad(lambda p: jnp.sum(moe_ffn(p, x, cfg) ** 2))(params)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g))
+    assert gn > 0
+
+
+def test_chunked_local_attention_masks_cross_chunk():
+    """llama4-style window: tokens must not attend across chunks."""
+    from repro.models.attention import blockwise_attention
+    import numpy as np
+    B, S, H, hd = 1, 32, 2, 8
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd))
+               for kk in jax.random.split(key, 3))
+    full = blockwise_attention(q, k, v, window=0, blk_q=8, blk_kv=8)
+    local = blockwise_attention(q, k, v, window=8, blk_q=8, blk_kv=8)
+    # first token of chunk 2 (idx 8) attends only to itself under window=8
+    # -> equals v[8] exactly
+    np.testing.assert_allclose(np.asarray(local[0, 8]), np.asarray(v[0, 8]),
+                               rtol=1e-4, atol=1e-5)
+    # but differs from full attention
+    assert not np.allclose(np.asarray(local[0, 8]), np.asarray(full[0, 8]))

@@ -1,0 +1,83 @@
+"""Property tests (hypothesis) for b-bit packing / expansion / elastic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bbit import (expand_onehot, expand_tokens, lowest_bits,
+                             pack_signatures, raw_storage_bits, storage_bits,
+                             unpack_signatures, vw_storage_bits)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 30), st.sampled_from([1, 2, 4, 8, 16]),
+       st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(k, b, seed):
+    rng = np.random.default_rng(seed)
+    sig = jnp.asarray(rng.integers(0, 1 << b, (3, k)), jnp.uint32)
+    packed = pack_signatures(sig, b)
+    got = unpack_signatures(packed, b, k)
+    assert np.array_equal(np.asarray(got), np.asarray(sig))
+    # storage really is ceil(k*b/32) words
+    assert packed.shape[1] == -(-k * b // 32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(2, 16))
+def test_expansion_has_exactly_k_ones(b, k):
+    rng = np.random.default_rng(b * 100 + k)
+    sig = jnp.asarray(rng.integers(0, 1 << b, (2, k)), jnp.uint32)
+    oh = np.asarray(expand_onehot(sig, b))
+    assert oh.shape == (2, k * (1 << b))
+    assert (oh.sum(axis=1) == k).all()
+    # inner product == match count (Eq. 5)
+    matches = int((np.asarray(sig[0]) == np.asarray(sig[1])).sum())
+    assert int(oh[0] @ oh[1]) == matches
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 64))
+def test_tokens_are_block_disjoint(b, k):
+    rng = np.random.default_rng(k)
+    sig = jnp.asarray(rng.integers(0, 1 << b, (1, k)), jnp.uint32)
+    tok = np.asarray(expand_tokens(sig, b))[0]
+    blocks = tok >> b
+    assert np.array_equal(blocks, np.arange(k))
+
+
+def test_lowest_bits_range():
+    sig = jnp.asarray([[0xFFFFFFFF, 0, 12345]], jnp.uint32)
+    for b in (1, 4, 8, 31):
+        out = np.asarray(lowest_bits(sig, b))
+        assert out.max() < (1 << b)
+
+
+def test_storage_model_ordering():
+    """b-bit storage << raw and << VW-at-parity (paper Figs 10-12)."""
+    bbit = storage_bits(k=500, b=8)                  # 4,000 bits/example
+    assert bbit < raw_storage_bits(avg_nnz=12062) / 90
+    assert bbit < vw_storage_bits(m_bins=16384) / 100
+
+
+def test_elastic_reshard_changes_mesh(tmp_path):
+    """Checkpoint saved unsharded restores under a 2-device mesh (elastic
+    scale-up) and values survive."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.train import checkpoint, reshard_restore
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, state)
+    mesh = Mesh(np.array(jax.devices()[:2]).reshape(2, 1), ("data", "model"))
+
+    def sharding_fn(template):
+        return {"w": NamedSharding(mesh, P("data", None))}
+
+    restored, step = reshard_restore(d, state, sharding_fn)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert len(restored["w"].sharding.device_set) == 2

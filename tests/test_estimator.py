@@ -1,0 +1,63 @@
+"""Theorem-1 estimator: constants, roundtrip, variance (Appendix A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Hash2U, bbit_constants, collision_prob,
+                        empirical_p_hat, estimate_resemblance, lowest_bits,
+                        minhash_signatures, theoretical_variance,
+                        theoretical_variance_minwise)
+from repro.data import word_pair_sets
+from repro.data.sparse import from_lists
+
+
+def test_sparse_limit_constants():
+    """r -> 0  =>  C1 = C2 = 2^-b  (Theorem 1 sparse limit)."""
+    for b in (1, 2, 4, 8):
+        c = bbit_constants(10, 12, 10**9, b)
+        np.testing.assert_allclose(float(c.C1), 2.0 ** -b, rtol=1e-3)
+        np.testing.assert_allclose(float(c.C2), 2.0 ** -b, rtol=1e-3)
+
+
+def test_forward_inverse_roundtrip():
+    for R in (0.1, 0.5, 0.9):
+        for b in (1, 2, 8):
+            pb = collision_prob(R, 5000, 6000, 2**20, b)
+            r = estimate_resemblance(pb, 5000, 6000, 2**20, b)
+            np.testing.assert_allclose(float(r), R, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b", [1, 2, 4])
+def test_estimator_unbiased_and_variance_matches(b):
+    """Empirical MSE over repetitions ~ theoretical variance (App. A)."""
+    D, k, n_rep = 2**18, 128, 60
+    f1, f2, R = 900, 850, 0.7
+    s1, s2 = word_pair_sets(D, f1, f2, R, seed=9)
+    true_r = len(np.intersect1d(s1, s2)) / len(np.union1d(s1, s2))
+    batch = from_lists([s1, s2])
+    errs = []
+    for rep in range(n_rep):
+        fam = Hash2U.create(jax.random.PRNGKey(1000 + rep), k, 18)
+        sig = minhash_signatures(batch.indices, batch.mask, fam)
+        sb = lowest_bits(sig, b)
+        p_hat = float(empirical_p_hat(sb[0], sb[1]))
+        errs.append(float(estimate_resemblance(p_hat, len(s1), len(s2), D, b))
+                    - true_r)
+    errs = np.asarray(errs)
+    mse = np.mean(errs**2)
+    var_th = float(theoretical_variance(true_r, len(s1), len(s2), D, b, k))
+    # bias should be small and MSE within ~3x of theory (finite reps)
+    assert abs(np.mean(errs)) < 3 * np.sqrt(var_th / n_rep) + 0.01
+    assert var_th / 3 < mse < var_th * 3, (mse, var_th)
+
+
+def test_bbit_variance_larger_than_minwise():
+    """b-bit estimator has higher variance per hash (the b vs k tradeoff)."""
+    R, k = 0.5, 100
+    v1 = float(theoretical_variance(R, 100, 100, 2**30, 1, k))
+    vm = float(theoretical_variance_minwise(R, k))
+    assert v1 > vm
+    # storage-normalized: 1-bit at 64x the hashes beats 64-bit minwise
+    assert float(theoretical_variance(R, 100, 100, 2**30, 1, 64 * k)) < vm

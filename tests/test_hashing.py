@@ -1,0 +1,101 @@
+"""Property tests for the universal-hash building blocks (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import (Hash2U, Hash4U, MERSENNE_P, add64,
+                                hash2u_apply, hash4u_apply, mod_mersenne31,
+                                mulmod_mersenne31, umul32_wide,
+                                PermutationFamily, family_storage_bytes)
+
+u32 = st.integers(min_value=0, max_value=2**32 - 1)
+u31 = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(u32, min_size=1, max_size=50),
+       st.lists(u32, min_size=1, max_size=50))
+def test_umul32_wide_matches_uint64(xs, ys):
+    n = min(len(xs), len(ys))
+    a = np.asarray(xs[:n], np.uint32)
+    b = np.asarray(ys[:n], np.uint32)
+    hi, lo = umul32_wide(jnp.asarray(a), jnp.asarray(b))
+    prod = a.astype(np.uint64) * b.astype(np.uint64)
+    assert np.array_equal(np.asarray(hi), (prod >> 32).astype(np.uint32))
+    assert np.array_equal(np.asarray(lo), (prod & 0xFFFFFFFF).astype(np.uint32))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(u31, min_size=1, max_size=50),
+       st.lists(u31, min_size=1, max_size=50))
+def test_mod_mersenne31_matches_modulo(xs, ys):
+    n = min(len(xs), len(ys))
+    a = np.asarray(xs[:n], np.uint32)
+    b = np.asarray(ys[:n], np.uint32)
+    got = np.asarray(mulmod_mersenne31(jnp.asarray(a), jnp.asarray(b)))
+    want = ((a.astype(np.uint64) * b.astype(np.uint64))
+            % np.uint64(2**31 - 1)).astype(np.uint32)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(u31, u31, u31)
+def test_add64_carry(hi, lo, c):
+    h, l = add64(jnp.uint32(hi), jnp.uint32(lo), jnp.uint32(c))
+    total = (int(hi) << 32) + int(lo) + int(c)
+    assert (int(h) << 32) + int(l) == total
+
+
+@pytest.mark.parametrize("s", [8, 16, 24, 30])
+def test_4u_polynomial_vs_bigint(s):
+    key = jax.random.PRNGKey(1)
+    h4 = Hash4U.create(key, k=5, s=s)
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 2**s, 64, dtype=np.int64)
+    out = np.asarray(h4(jnp.asarray(t)))
+    A = np.asarray(h4.a).astype(object)
+    p = 2**31 - 1
+    for i in range(len(t)):
+        for j in range(5):
+            ti = int(t[i])
+            val = (int(A[0, j]) + int(A[1, j]) * ti + int(A[2, j]) * ti**2
+                   + int(A[3, j]) * ti**3) % p % (2**s)
+            assert out[i, j] == val
+
+
+@pytest.mark.parametrize("variant", ["high", "low"])
+def test_2u_matches_formula(variant):
+    key = jax.random.PRNGKey(2)
+    f = Hash2U.create(key, k=7, s=20, variant=variant)
+    rng = np.random.default_rng(1)
+    t = rng.integers(0, 2**20, 100, dtype=np.int64)
+    out = np.asarray(f(jnp.asarray(t)))
+    a1 = np.asarray(f.a1).astype(np.uint64)
+    a2 = np.asarray(f.a2).astype(np.uint64)
+    v = (a1[None, :] + a2[None, :] * t[:, None].astype(np.uint64)) % 2**32
+    want = (v >> (32 - 20)) if variant == "high" else (v % 2**20)
+    assert np.array_equal(out, want.astype(np.uint32))
+
+
+def test_2u_output_range_and_determinism():
+    f = Hash2U.create(jax.random.PRNGKey(0), k=16, s=10)
+    t = jnp.arange(1000)
+    o1, o2 = f(t), f(t)
+    assert np.array_equal(np.asarray(o1), np.asarray(o2))
+    assert int(jnp.max(o1)) < 2**10
+
+
+def test_storage_accounting():
+    key = jax.random.PRNGKey(0)
+    D, k = 2**16, 100
+    perm = PermutationFamily.create(key, k, D)
+    h2 = Hash2U.create(key, k, 16)
+    h4 = Hash4U.create(key, k, 16)
+    assert family_storage_bytes(perm) == k * D * 4
+    assert family_storage_bytes(h2) == 2 * k * 4
+    assert family_storage_bytes(h4) == 4 * k * 4
+    # the paper's Issue 3: permutations are >> hash coefficients
+    assert family_storage_bytes(perm) > 1000 * family_storage_bytes(h4)

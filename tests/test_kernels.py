@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hashing import Hash2U, Hash4U
+from repro.kernels import batch_signatures, minhash2u, minhash4u, sigbag
+from repro.kernels import ref as kref
+from repro.data.sparse import from_lists
+
+RNG = np.random.default_rng(7)
+
+
+def _case(n, nnz, k, s):
+    indices = jnp.asarray(RNG.integers(0, 2**s, (n, nnz)), jnp.int32)
+    counts = jnp.asarray(RNG.integers(1, nnz + 1, (n,)), jnp.int32)
+    return indices, counts
+
+
+@pytest.mark.parametrize("n,nnz,k", [(3, 100, 20), (8, 128, 128),
+                                     (17, 300, 70), (5, 513, 33)])
+@pytest.mark.parametrize("s", [12, 24, 32])
+def test_minhash2u_kernel_matches_ref(n, nnz, k, s):
+    indices, counts = _case(n, nnz, k, s)
+    fam = Hash2U.create(jax.random.PRNGKey(n * 1000 + k), k, s)
+    got = minhash2u(indices, counts, fam.a1, fam.a2, s=s)
+    want = kref.minhash2u_ref(indices, counts.reshape(-1, 1), fam.a1, fam.a2,
+                              s=s)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8, 12])
+def test_minhash2u_fused_bbit(b):
+    indices, counts = _case(6, 200, 50, 20)
+    fam = Hash2U.create(jax.random.PRNGKey(b), 50, 20)
+    got = minhash2u(indices, counts, fam.a1, fam.a2, s=20, b=b)
+    full = kref.minhash2u_ref(indices, counts.reshape(-1, 1), fam.a1, fam.a2,
+                              s=20)
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(full) & ((1 << b) - 1))
+    assert int(jnp.max(got)) < (1 << b)
+
+
+@pytest.mark.parametrize("n,nnz,k,s", [(4, 100, 16, 16), (9, 257, 40, 24),
+                                       (8, 128, 128, 30)])
+def test_minhash4u_kernel_matches_ref(n, nnz, k, s):
+    indices, counts = _case(n, nnz, k, s)
+    fam = Hash4U.create(jax.random.PRNGKey(k), k, s)
+    got = minhash4u(indices, counts, fam.a, s=s)
+    want = kref.minhash4u_ref(indices, counts.reshape(-1, 1), fam.a, s=s)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_vs_minhash_module():
+    """Pallas path == the core library path on a real SparseBatch."""
+    from repro.core.minhash import minhash_signatures
+    from repro.data import word_pair_sets
+    D = 2**20
+    s1, s2 = word_pair_sets(D, 700, 600, 0.4, seed=2)
+    batch = from_lists([s1, s2])
+    fam = Hash2U.create(jax.random.PRNGKey(0), 64, 20)
+    via_kernel = batch_signatures(batch, fam)
+    via_module = minhash_signatures(batch.indices, batch.mask, fam)
+    assert np.array_equal(np.asarray(via_kernel), np.asarray(via_module))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,k,b,d", [(10, 16, 4, 8), (130, 32, 6, 32),
+                                     (64, 500, 8, 1)])
+def test_sigbag_kernel_matches_ref(dtype, n, k, b, d):
+    tok = jnp.asarray(RNG.integers(0, 2**b, (n, k)), jnp.int32)
+    table = jnp.asarray(RNG.normal(size=(k, 2**b, d)), dtype)
+    got = sigbag(tok, table)
+    want = kref.sigbag_ref(tok, table)
+    rtol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol,
+                               atol=1e-4 if dtype == jnp.float32 else 0.3)
+
+
+def test_sigbag_is_eq5_inner_product():
+    """sigbag with d=1 equals the Eq.(5) one-hot expansion dot product."""
+    from repro.core.bbit import expand_onehot
+    k, b, n = 24, 3, 12
+    tok = jnp.asarray(RNG.integers(0, 2**b, (n, k)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(k * 2**b,)), jnp.float32)
+    via_kernel = np.asarray(sigbag(tok, w.reshape(k, 2**b, 1)))[:, 0]
+    oh = expand_onehot(tok.astype(jnp.uint32), b)
+    via_onehot = np.asarray(oh @ w)
+    np.testing.assert_allclose(via_kernel, via_onehot, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,116 @@
+"""Linear learning on hashed features: parity + accuracy (paper §4-§6)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Hash2U, Hash4U, PermutationFamily, VWHasher,
+                        expand_onehot, lowest_bits, minhash_signatures)
+from repro.data import TINY, generate
+from repro.models.linear import (LinearModel, accuracy, asgd_model,
+                                 dense_margin, hashed_margin, make_loss_fn,
+                                 sgd_svm_init, sgd_svm_step)
+from repro.optim import adamw, constant
+from repro.train import TrainState, Trainer, make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    train, test = generate(TINY)
+    return train, test
+
+
+def _signatures(batch, fam, b):
+    return lowest_bits(minhash_signatures(batch.indices, batch.mask, fam), b)
+
+
+def test_hashed_margin_equals_explicit_expansion(tiny_data):
+    train, _ = tiny_data
+    k, b = 32, 4
+    fam = Hash2U.create(jax.random.PRNGKey(0), k, 16)
+    sig = _signatures(train, fam, b)
+    model = LinearModel(
+        w=jax.random.normal(jax.random.PRNGKey(1), (k * 2**b,)),
+        bias=jnp.float32(0.3))
+    implicit = hashed_margin(model, sig, b)
+    explicit = dense_margin(model, expand_onehot(sig, b) / jnp.sqrt(float(k)))
+    np.testing.assert_allclose(np.asarray(implicit), np.asarray(explicit),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["svm", "logistic"])
+def test_batch_training_reaches_accuracy(tiny_data, kind):
+    train, test = tiny_data
+    k, b = 128, 8
+    fam = Hash2U.create(jax.random.PRNGKey(2), k, 16)
+    sig_tr, sig_te = _signatures(train, fam, b), _signatures(test, fam, b)
+    loss = make_loss_fn(kind, "hashed", b, C=1.0)
+    opt = adamw(constant(0.05))
+    state = TrainState.create(LinearModel.create(k * 2**b), opt)
+    step = make_train_step(lambda p, batch: loss(p, *batch), opt)
+    tr = Trainer(step)
+    state = tr.fit(state, lambda: iter([(sig_tr, train.labels)] * 120), 120)
+    acc = float(accuracy(state.params, sig_te, test.labels,
+                         feature_kind="hashed", b=b))
+    assert acc > 0.9, acc
+
+
+def test_hash_families_learning_parity(tiny_data):
+    """Paper Fig. 4: perm / 2U / 4U give matching accuracies (k,b large)."""
+    train, test = tiny_data
+    k, b = 128, 8
+    accs = {}
+    for name, fam in [
+        ("perm", PermutationFamily.create(jax.random.PRNGKey(4), k, 2**16)),
+        ("2u", Hash2U.create(jax.random.PRNGKey(5), k, 16)),
+        ("4u", Hash4U.create(jax.random.PRNGKey(6), k, 16)),
+    ]:
+        sig_tr, sig_te = _signatures(train, fam, b), _signatures(test, fam, b)
+        loss = make_loss_fn("svm", "hashed", b, C=1.0)
+        opt = adamw(constant(0.05))
+        state = TrainState.create(LinearModel.create(k * 2**b), opt)
+        step = make_train_step(lambda p, batch: loss(p, *batch), opt)
+        state = Trainer(step).fit(
+            state, lambda: iter([(sig_tr, train.labels)] * 100), 100)
+        accs[name] = float(accuracy(state.params, sig_te, test.labels,
+                                    feature_kind="hashed", b=b))
+    vals = list(accs.values())
+    assert max(vals) - min(vals) < 0.08, accs
+
+
+def test_online_sgd_and_asgd(tiny_data):
+    train, test = tiny_data
+    k, b = 128, 8
+    fam = Hash2U.create(jax.random.PRNGKey(7), k, 16)
+    sig_tr, sig_te = _signatures(train, fam, b), _signatures(test, fam, b)
+    state = sgd_svm_init(k * 2**b, avg_start=100.0)
+    step = jax.jit(functools.partial(sgd_svm_step, lam=1e-4, eta0=0.5, b=b,
+                                     average=True))
+    for _ in range(20):
+        for i in range(0, train.n, 16):
+            state = step(state, sig_tr[i:i + 16], train.labels[i:i + 16])
+    acc_last = float(accuracy(state.model, sig_te, test.labels,
+                              feature_kind="hashed", b=b))
+    acc_avg = float(accuracy(asgd_model(state), sig_te, test.labels,
+                             feature_kind="hashed", b=b))
+    assert acc_last > 0.85 and acc_avg > 0.85
+
+
+def test_vw_learning(tiny_data):
+    """VW baseline trains on dense hashed vectors (paper §4.2)."""
+    train, test = tiny_data
+    vw = VWHasher.create(jax.random.PRNGKey(8), m_bits=10, mode="u2")
+    x_tr = vw(train.indices, train.mask)
+    x_te = vw(test.indices, test.mask)
+    loss = make_loss_fn("logistic", "dense", 0, C=1.0)
+    opt = adamw(constant(0.05))
+    state = TrainState.create(LinearModel.create(vw.m), opt)
+    step = make_train_step(lambda p, batch: loss(p, *batch), opt)
+    state = Trainer(step).fit(
+        state, lambda: iter([(x_tr, train.labels)] * 100), 100)
+    acc = float(accuracy(state.params, x_te, test.labels,
+                         feature_kind="dense"))
+    assert acc > 0.85, acc

@@ -1,0 +1,110 @@
+"""RecSys: EmbeddingBag semantics + minhash frontend == paper's Eq. (5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.recsys import (embedding_bag, embedding_lookup,
+                                 init_recsys_params, minhash_frontend,
+                                 recsys_logits, _minhash_coeffs)
+from repro.kernels import sigbag, minhash2u
+from repro.kernels import ref as kref
+
+
+def test_embedding_lookup_matches_onehot():
+    rng = np.random.default_rng(0)
+    F, V, d, B = 3, 50, 4, 7
+    table = jnp.asarray(rng.normal(size=(F, V, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (B, F)), jnp.int32)
+    got = embedding_lookup(table, ids)
+    want = np.stack([
+        np.asarray(table)[f][np.asarray(ids)[:, f]] for f in range(F)], axis=1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_embedding_bag_sum_and_mean():
+    rng = np.random.default_rng(1)
+    V, d, B, L = 30, 5, 4, 6
+    table = jnp.asarray(rng.normal(size=(V, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (B, L)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, L)) < 0.7, jnp.float32)
+    got = embedding_bag(table, ids, mask, "sum")
+    want = np.einsum("bl,bld->bd", np.asarray(mask),
+                     np.asarray(table)[np.asarray(ids)])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+    got_m = embedding_bag(table, ids, mask, "mean")
+    cnt = np.maximum(np.asarray(mask).sum(1, keepdims=True), 1)
+    np.testing.assert_allclose(np.asarray(got_m), want / cnt, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_minhash_frontend_equals_kernel_path():
+    """In-graph jnp frontend == Pallas preprocessing kernel + sigbag."""
+    spec = get_arch("autoint")
+    cfg = spec.smoke
+    params = init_recsys_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    B = 9
+    set_ids = jnp.asarray(rng.integers(0, 1 << cfg.minhash_s,
+                                       (B, cfg.set_nnz)), jnp.int32)
+    counts = jnp.asarray(rng.integers(1, cfg.set_nnz, (B,)), jnp.int32)
+    in_graph = minhash_frontend(params, set_ids, counts, cfg)
+
+    a1, a2 = _minhash_coeffs(cfg.arch_id, cfg.minhash_k)
+    sig = minhash2u(set_ids, counts, jnp.asarray(a1), jnp.asarray(a2),
+                    s=cfg.minhash_s, b=cfg.minhash_b)       # Pallas kernel
+    via_kernel = sigbag(sig.astype(jnp.int32), params["minhash_table"])
+    np.testing.assert_allclose(np.asarray(in_graph), np.asarray(via_kernel),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_minhash_frontend_reduces_storage():
+    """The paper's data-reduction claim for embeddings: table is O(k 2^b d),
+    independent of the raw universe D = 2^s."""
+    spec = get_arch("wide-deep")
+    cfg = spec.config
+    table_rows = cfg.minhash_k * (1 << cfg.minhash_b)
+    assert table_rows < (1 << cfg.minhash_s) / 100
+
+
+def test_frontend_changes_logits():
+    """The hashed feature must actually contribute to predictions."""
+    spec = get_arch("wide-deep")
+    cfg = spec.smoke
+    params = init_recsys_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    B = 4
+    batch = {
+        "field_ids": jnp.asarray(rng.integers(0, cfg.vocab, (B, cfg.n_fields)),
+                                 jnp.int32),
+        "set_ids": jnp.asarray(rng.integers(0, 1 << cfg.minhash_s,
+                                            (B, cfg.set_nnz)), jnp.int32),
+        "set_counts": jnp.asarray([5, 10, 20, 30], jnp.int32),
+    }
+    l1 = recsys_logits(params, batch, cfg)
+    batch2 = dict(batch, set_ids=(batch["set_ids"] + 7) % (1 << cfg.minhash_s))
+    l2 = recsys_logits(params, batch2, cfg)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+@pytest.mark.parametrize("arch", ["din", "mind"])
+def test_sequence_models_attend_to_history(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    params = init_recsys_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    B = 5
+    batch = {
+        "hist_ids": jnp.asarray(rng.integers(0, cfg.item_vocab,
+                                             (B, cfg.seq_len)), jnp.int32),
+        "hist_mask": jnp.ones((B, cfg.seq_len), jnp.float32),
+        "target_id": jnp.asarray(rng.integers(0, cfg.item_vocab, (B,)),
+                                 jnp.int32),
+    }
+    l1 = recsys_logits(params, batch, cfg)
+    batch2 = dict(batch, hist_ids=(batch["hist_ids"] + 13) % cfg.item_vocab)
+    l2 = recsys_logits(params, batch2, cfg)
+    assert l1.shape == (B,)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
