@@ -1,0 +1,81 @@
+"""One Permutation Hashing vs k-pass minwise hashing preprocessing.
+
+The paper's §3 cost model: minwise preprocessing evaluates k hash
+functions per nonzero (k ~ 500).  OPH (Li-Owen-Zhang, NIPS 2012)
+evaluates ONE function per nonzero and splits the hashed universe into k
+bins, so hash-evaluation counts drop by exactly k at equal signature
+length.  This module reports, per (k, scheme):
+
+  * the analytic hash-evaluation count (the §3 cost model; platform
+    independent, this is the >= k x reduction the OPH subsystem exists
+    for),
+  * the kernel-level count (the Pallas OPH kernel re-evaluates its one
+    function once per BLK_K lane block, i.e. ceil(k/512) times -- still
+    ~k x below minhash's k),
+  * interpret-mode wall time of both kernels for the relative trend
+    (absolute speedups need a real TPU; interpret mode mostly measures
+    the emulator).
+
+Estimator quality at equal k is covered by tests/test_oph.py and the
+resemblance_mse module; this module is pure preprocessing cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, bench_dataset, time_fn
+from repro.core.hashing import Hash2U
+from repro.core.oph import OPH, hash_evaluations
+from repro.kernels import minhash2u, oph2u
+
+S = 20
+N, AVG_NNZ = 64, 256
+
+
+def run() -> list[Row]:
+    train, _ = bench_dataset(n=N, D=2**S, avg_nnz=AVG_NNZ)
+    counts = np.asarray(train.mask.sum(axis=1), np.int32)
+    d_idx = jax.device_put(train.indices)
+    d_cnt = jax.device_put(counts)
+    nnz_total = int(counts.sum())
+    rows: list[Row] = []
+
+    for k in (128, 512):
+        key = jax.random.PRNGKey(k)
+        fam = Hash2U.create(key, k, S)
+        oph = OPH.create(key, k, S, "2u", "rotation")
+
+        t_min = time_fn(lambda: minhash2u(d_idx, d_cnt, fam.a1, fam.a2,
+                                          s=S, b=8))
+        t_oph = time_fn(lambda: oph2u(d_idx, d_cnt, oph.base.a1, oph.base.a2,
+                                      s=S, k=k, densify="rotation", b=8))
+
+        evals_min = hash_evaluations(N, AVG_NNZ, k, "minhash")
+        evals_oph = hash_evaluations(N, AVG_NNZ, k, "oph")
+        # the kernel evaluates its ONE function once per BLK_K lane block;
+        # derive the pass count from the wrapper's actual block choice
+        from repro.kernels.ops import _oph_lanes
+        k_lanes, blk_k = _oph_lanes(k, 0)
+        kernel_passes = k_lanes // blk_k
+        rows.append((f"oph/k_{k}", t_oph, {
+            "minhash_us": round(t_min, 1),
+            "hash_evals_minhash": int(evals_min),
+            "hash_evals_oph": int(evals_oph),
+            "reduction_x": round(evals_min / evals_oph, 1),
+            "kernel_evals_oph": nnz_total * kernel_passes,
+            "kernel_reduction_x": round(nnz_total * k
+                                        / (nnz_total * kernel_passes), 1),
+        }))
+
+    # coefficient storage (the paper's Issue 3, taken to its extreme:
+    # OPH stores ONE function's coefficients regardless of k)
+    from repro.core.hashing import family_storage_bytes
+    fam = Hash2U.create(jax.random.PRNGKey(0), 512, S)
+    oph = OPH.create(jax.random.PRNGKey(0), 512, S, "2u")
+    rows.append(("oph/storage", 0.0, {
+        "minhash_coeff_bytes": family_storage_bytes(fam),
+        "oph_coeff_bytes": family_storage_bytes(oph),
+    }))
+    return rows

@@ -16,6 +16,7 @@ from benchmarks.common import fmt_rows
 MODULES = [
     ("preprocessing_cpu", "Table 2"),
     ("preprocessing_kernel", "Table 3 / Figs 1-3"),
+    ("preprocessing_oph", "OPH vs §3 k-pass cost"),
     ("learning_hashfuncs", "Fig 4"),
     ("vw_hashfuncs", "Fig 5"),
     ("learning_scaling", "Figs 6-9"),

@@ -1,0 +1,45 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+``shard_map`` has moved twice across jax releases:
+
+  * old:  ``jax.experimental.shard_map.shard_map`` with a ``check_rep``
+    keyword,
+  * new:  ``jax.shard_map`` with ``check_rep`` renamed to ``check_vma``.
+
+``repro.compat.shard_map`` resolves whichever exists at import time and
+accepts either keyword spelling, so callers (the expert-parallel MoE,
+the compressed-allreduce optimizer wrappers, tests) write one form and
+run on both.  Add future jax API moves here rather than try/except-ing
+at call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "check_vma"
+    from jax.experimental.shard_map import shard_map as fn
+    return fn, "check_rep"
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """Version-agnostic ``shard_map``.
+
+    Accepts ``check_rep`` or ``check_vma`` (synonyms for the replication
+    check) and forwards whichever spelling the installed jax expects;
+    other keywords pass through untouched.
+    """
+    for alias in ("check_rep", "check_vma"):
+        if alias in kwargs and alias != _CHECK_KW:
+            kwargs[_CHECK_KW] = kwargs.pop(alias)
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -3,6 +3,8 @@
 Public API:
   hashing:   Hash2U, Hash4U, PermutationFamily, mod_mersenne31, umul32_wide
   minhash:   minhash_signatures, signature_matches
+  oph:       OPH, oph_signatures, densify_rotation (one-permutation hashing:
+             k bins from ONE hash pass, sentinel or rotation densification)
   bbit:      lowest_bits, expand_tokens, expand_onehot, pack/unpack, storage
   estimator: bbit_constants, estimate_resemblance, theoretical_variance
   vw:        VWHasher (feature-hashing baseline)
@@ -14,22 +16,29 @@ from repro.core.hashing import (Hash2U, Hash4U, PermutationFamily, MERSENNE_P,
                                 mulmod_mersenne31, umul32_wide)
 from repro.core.minhash import (minhash_signatures, resemblance,
                                 signature_matches)
+from repro.core.oph import (EMPTY, OPH, densify_rotation, hash_evaluations,
+                            oph_match_fraction, oph_signatures)
 from repro.core.bbit import (expand_onehot, expand_tokens, lowest_bits,
                              pack_signatures, raw_storage_bits, storage_bits,
                              unpack_signatures, vw_storage_bits)
 from repro.core.estimator import (bbit_constants, collision_prob,
-                                  empirical_p_hat, estimate_resemblance,
+                                  empirical_p_hat, empirical_p_hat_oph,
+                                  estimate_resemblance,
+                                  estimate_resemblance_oph,
                                   theoretical_variance,
                                   theoretical_variance_minwise)
 from repro.core.vw import VWHasher
 
 __all__ = [
+    "EMPTY", "OPH", "densify_rotation", "hash_evaluations",
+    "oph_match_fraction", "oph_signatures",
     "Hash2U", "Hash4U", "PermutationFamily", "MERSENNE_P", "add64",
     "family_storage_bytes", "hash2u_apply", "hash4u_apply", "mod_mersenne31",
     "mulmod_mersenne31", "umul32_wide", "minhash_signatures", "resemblance",
     "signature_matches", "expand_onehot", "expand_tokens", "lowest_bits",
     "pack_signatures", "raw_storage_bits", "storage_bits",
     "unpack_signatures", "vw_storage_bits", "bbit_constants",
-    "collision_prob", "empirical_p_hat", "estimate_resemblance",
+    "collision_prob", "empirical_p_hat", "empirical_p_hat_oph",
+    "estimate_resemblance", "estimate_resemblance_oph",
     "theoretical_variance", "theoretical_variance_minwise", "VWHasher",
 ]

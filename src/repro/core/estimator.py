@@ -79,3 +79,30 @@ def theoretical_variance_minwise(R, k):
 def empirical_p_hat(sig1_b: jax.Array, sig2_b: jax.Array) -> jax.Array:
     """P̂_b: fraction of matching b-bit values across the k signatures."""
     return jnp.mean((sig1_b == sig2_b).astype(jnp.float32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# One Permutation Hashing variants (scheme="oph")
+# ---------------------------------------------------------------------------
+
+def empirical_p_hat_oph(sig1_b: jax.Array, sig2_b: jax.Array) -> jax.Array:
+    """P̂_b over jointly non-empty bins (sentinel-coded OPH signatures).
+
+    Rotation-densified signatures have no EMPTY bins, so this reduces to
+    ``empirical_p_hat`` there; for ``densify="sentinel"`` it is the
+    Li-Owen-Zhang normalization N_match / (k - N_jointly_empty).
+    """
+    from repro.core.oph import oph_match_fraction
+    return oph_match_fraction(sig1_b, sig2_b)
+
+
+def estimate_resemblance_oph(sig1_b, sig2_b, f1, f2, D, b):
+    """R̂_b from b-bit OPH signatures via the Theorem-1 correction.
+
+    Uses the OPH-aware collision fraction, then the same (C1, C2)
+    debiasing as the k-permutation estimator -- the bin process is a
+    without-replacement sample of one permutation, whose collision
+    probability matches Theorem 1 up to O(1/k) terms.
+    """
+    return estimate_resemblance(empirical_p_hat_oph(sig1_b, sig2_b),
+                                f1, f2, D, b)

@@ -273,4 +273,7 @@ def family_storage_bytes(family) -> int:
         return 2 * family.k * 4
     if isinstance(family, Hash4U):
         return 4 * family.k * 4
+    base = getattr(family, "base", None)   # OPH: ONE function's coefficients
+    if base is not None:
+        return family_storage_bytes(base)
     raise TypeError(type(family))

@@ -8,7 +8,8 @@ Given a batch of binary feature *sets* (padded-CSR layout, see
 under one of three hash families (permutation / 2U / 4U).  This is the
 expensive preprocessing the paper accelerates with GPUs; here the jnp path
 is the reference oracle and ``repro.kernels.minhash`` holds the Pallas TPU
-kernels.  The jnp path is written with a k-chunked scan so the
+kernels.  (``repro.core.oph`` implements the One Permutation Hashing
+alternative: the same (n, k) signature from ONE hash pass per vector.)  The jnp path is written with a k-chunked scan so the
 ``(n, nnz, k)`` intermediate never exceeds ``chunk_k`` lanes -- the same
 blocking idea as the kernel, expressed at the XLA level.
 """

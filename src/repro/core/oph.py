@@ -1,0 +1,227 @@
+"""One Permutation Hashing (OPH): k-bin signatures from ONE hash pass.
+
+The paper's §3 preprocessing evaluates k independent hash functions per
+nonzero (k ~ 500).  One Permutation Hashing (Li, Owen, Zhang, NIPS 2012)
+instead applies a *single* hash function h: [0, D) -> [0, D), splits the
+hashed universe into k equal bins of width D/k, and keeps the minimum
+in-bin offset per bin:
+
+    bin(t)    = h(t) >> (s - log2 k)            (high bits)
+    offset(t) = h(t) &  (D/k - 1)               (low bits)
+    z_j       = min { offset(t) : t in S, bin(t) == j }
+
+This is ~k x less hashing work for the same signature length.  Bins that
+receive no element of S are *empty*; two strategies are implemented:
+
+  * ``densify="sentinel"``: keep the 0xFFFFFFFF sentinel and use the
+    Li-Owen-Zhang estimator  R^ = N_match / (k - N_jointly_empty) --
+    unbiased, but signatures are not directly usable as fixed-length
+    b-bit features,
+  * ``densify="rotation"``: Shrivastava & Li (ICML 2014) densification --
+    an empty bin borrows the value of the nearest non-empty bin to its
+    right (circularly), shifted by ``distance * C`` with C = D/k + 1 so
+    borrowed values never collide with genuine ones.  The densified
+    signature behaves like a standard minhash signature (same-bin
+    collision probability R), so the whole b-bit / learning stack applies
+    unchanged.
+
+The single hash function is any of the existing families from
+``repro.core.hashing`` instantiated with ``k == 1`` (2U / 4U /
+a true random permutation); ``family_storage_bytes`` then shows the
+paper's Issue-3 win at its extreme: 8-16 bytes of coefficients total.
+
+This module is the jnp reference; ``repro.kernels.oph`` holds the Pallas
+TPU kernels validated bit-exactly against it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import Hash2U, Hash4U, PermutationFamily
+
+_U32 = jnp.uint32
+
+# Sentinel for empty bins (and padded rows): larger than any in-bin offset,
+# which is < D/k <= 2^31.
+EMPTY = jnp.uint32(0xFFFFFFFF)
+
+BaseFamily = Union[Hash2U, Hash4U, PermutationFamily]
+
+
+@dataclasses.dataclass(frozen=True)
+class OPH:
+    """An OPH scheme: ONE base hash function + k bins + densification.
+
+    ``base`` must hold exactly one hash function (``base.k == 1``) over a
+    power-of-two universe D = 2^s with s <= 31; ``k`` (the number of bins
+    == signature length) must be a power of two dividing D.
+    """
+
+    base: BaseFamily
+    k: int                      # number of bins == signature length
+    densify: str = "rotation"   # "rotation" | "sentinel"
+
+    def __post_init__(self):
+        if self.base.k != 1:
+            raise ValueError(f"OPH uses ONE hash function, got base.k={self.base.k}")
+        s = self.s
+        if s > 31:
+            raise ValueError(f"OPH needs s <= 31 (rotation offsets overflow), got {s}")
+        if self.k & (self.k - 1) or not (1 <= self.k <= (1 << s)):
+            raise ValueError(f"k must be a power of two in [1, 2^{s}], got {self.k}")
+        if self.densify not in ("rotation", "sentinel"):
+            raise ValueError(f"densify must be 'rotation' or 'sentinel', got {self.densify!r}")
+
+    @property
+    def s(self) -> int:
+        if isinstance(self.base, PermutationFamily):
+            D = self.base.D
+            if D & (D - 1):
+                raise ValueError(f"OPH over a permutation needs power-of-two D, got {D}")
+            return D.bit_length() - 1
+        return self.base.s
+
+    @property
+    def D(self) -> int:
+        return 1 << self.s
+
+    @property
+    def bin_bits(self) -> int:
+        return self.k.bit_length() - 1
+
+    @property
+    def bin_width(self) -> int:
+        return 1 << (self.s - self.bin_bits)
+
+    @staticmethod
+    def create(key: jax.Array, k: int, s: int, family: str = "2u",
+               densify: str = "rotation", **family_kwargs) -> "OPH":
+        """Build an OPH scheme with a fresh single-function base family."""
+        if family == "2u":
+            base = Hash2U.create(key, 1, s, **family_kwargs)
+        elif family == "4u":
+            base = Hash4U.create(key, 1, s, **family_kwargs)
+        elif family == "perm":
+            base = PermutationFamily.create(key, 1, 1 << s)
+        else:
+            raise ValueError(f"family must be '2u', '4u' or 'perm', got {family!r}")
+        return OPH(base=base, k=k, densify=densify)
+
+
+def split_hash(h: jax.Array, s: int, bin_bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Split a hash value in [0, 2^s) into (bin id, in-bin offset)."""
+    h = h.astype(_U32)
+    off_bits = s - bin_bits
+    bins = (h >> _U32(off_bits)) if bin_bits > 0 else jnp.zeros_like(h)
+    offs = h & _U32((1 << off_bits) - 1)
+    return bins, offs
+
+
+def oph_signatures(indices: jax.Array, mask: jax.Array, oph: OPH,
+                   b: int = 0) -> jax.Array:
+    """Reference (jnp) OPH signatures for a padded sparse batch.
+
+    Args:
+      indices: (n, max_nnz) int32 feature ids in [0, D).
+      mask:    (n, max_nnz) bool, True for real entries.
+      oph:     the OPH scheme (base family, k bins, densification).
+      b:       if > 0, keep only the lowest b bits of each (densified)
+               value.  Under ``densify="sentinel"`` empty bins stay EMPTY
+               so the estimator can still exclude them; under
+               ``densify="rotation"`` the only possible EMPTYs are
+               all-empty rows (empty input sets), which fold to the
+               all-ones b-bit code -- the same defined value the k-pass
+               minhash path assigns empty sets -- so signatures are
+               always bit-packable.
+
+    Returns:
+      (n, k) uint32: in-bin minima (EMPTY where a bin got no element and
+      ``densify="sentinel"``).
+    """
+    n = indices.shape[0]
+    h = oph.base(indices)[..., 0]                     # ONE hash: (n, nnz)
+    bins, offs = split_hash(h, oph.s, oph.bin_bits)
+    offs = jnp.where(mask, offs, EMPTY)
+    # segment-min per (row, bin) via scatter-min; masked lanes carry EMPTY
+    # and bin 0, so they can never beat a genuine offset (offset < D/k).
+    bins = jnp.where(mask, bins, 0).astype(jnp.int32)
+    sig = jnp.full((n, oph.k), EMPTY).at[
+        jnp.arange(n)[:, None], bins].min(offs)
+    if oph.densify == "rotation":
+        sig = densify_rotation(sig, oph.bin_width)
+    if b > 0:
+        mask_b = _U32((1 << b) - 1)
+        if oph.densify == "rotation":
+            sig = sig & mask_b        # EMPTY (all-empty rows) -> 2^b - 1
+        else:
+            sig = jnp.where(sig != EMPTY, sig & mask_b, sig)
+    return sig
+
+
+def densify_rotation(sig: jax.Array, bin_width: int) -> jax.Array:
+    """Shrivastava-Li rotation densification of sentinel-coded signatures.
+
+    Each empty bin j takes the value of the nearest non-empty bin to its
+    right (circularly), plus ``distance * C`` with C = bin_width + 1, so a
+    borrowed value can never equal a genuine offset and two borrows
+    collide iff they borrow the same value over the same distance --
+    exactly the LSH-preserving scheme of the densification paper.
+
+    Rows that are entirely empty (empty input sets) stay all-EMPTY.
+    Vectorized O(k) per row: a reversed cummin gives every bin the index
+    of its nearest non-empty successor; the circular wrap reuses the
+    row-wide first non-empty index.
+    """
+    n, k = sig.shape
+    nonempty = sig != EMPTY
+    idx = jnp.arange(k, dtype=jnp.int32)
+    # index of each non-empty bin, 2k for empty ones (any value > k works)
+    cand = jnp.where(nonempty, idx, jnp.int32(2 * k))
+    # nearest non-empty at position >= j (non-circular part)
+    suffix = jax.lax.cummin(cand[:, ::-1], axis=1)[:, ::-1]
+    first = jnp.min(cand, axis=1, keepdims=True)      # row's first non-empty
+    donor_pos = jnp.where(suffix < 2 * k, suffix, first + k)   # circular
+    dist = (donor_pos - idx).astype(_U32)
+    donor = jnp.take_along_axis(sig, (donor_pos % k).astype(jnp.int32), axis=1)
+    C = _U32(bin_width + 1)
+    borrowed = donor + C * dist
+    dense = jnp.where(nonempty, sig, borrowed)
+    # all-empty rows: first == 2k, donor values are EMPTY-garbage -> keep EMPTY
+    return jnp.where(first < 2 * k, dense, EMPTY)
+
+
+# ---------------------------------------------------------------------------
+# Estimators
+# ---------------------------------------------------------------------------
+
+def oph_match_fraction(sig1: jax.Array, sig2: jax.Array) -> jax.Array:
+    """Li-Owen-Zhang estimator R^ = N_match / (k - N_jointly_empty).
+
+    Works on sentinel-coded signatures; on densified signatures there are
+    no EMPTY bins and this reduces to the plain Eq.(2) match fraction.
+    """
+    both_empty = (sig1 == EMPTY) & (sig2 == EMPTY)
+    match = (sig1 == sig2) & ~both_empty
+    n_match = jnp.sum(match.astype(jnp.float32), axis=-1)
+    denom = sig1.shape[-1] - jnp.sum(both_empty.astype(jnp.float32), axis=-1)
+    return n_match / jnp.maximum(denom, 1.0)
+
+
+def hash_evaluations(n: int, avg_nnz: float, k: int, scheme: str) -> float:
+    """Analytic hash-evaluation count of preprocessing (the §3 cost model).
+
+    k-pass minwise hashing evaluates one of k functions per (set, nonzero)
+    pair; OPH evaluates its single function once per nonzero regardless
+    of k.  The ratio is exactly k -- the tentpole speedup this subsystem
+    exists for.
+    """
+    if scheme == "minhash":
+        return n * avg_nnz * k
+    if scheme == "oph":
+        return n * avg_nnz
+    raise ValueError(f"scheme must be 'minhash' or 'oph', got {scheme!r}")

@@ -196,6 +196,41 @@ class ChunkedLoader:
             raise err[0]
 
 
+class SignatureStream:
+    """Stream (signatures, labels) chunks: loader -> hash kernel -> b bits.
+
+    The online-learning front half of the §3 pipeline with pluggable
+    hashing scheme: ``family`` is a Hash2U/Hash4U (k-pass minwise
+    hashing) or a ``repro.core.oph.OPH`` scheme (single-pass
+    one-permutation hashing).  Each yielded pair is the hashed chunk the
+    SGD loop consumes; ``stats`` aggregates load/kernel accounting like
+    ``preprocess_shards`` does for the batch path.
+    """
+
+    def __init__(self, shard_paths: Sequence[str], family, *, b: int = 8,
+                 chunk_size: int = 10_000, use_pallas: bool = True,
+                 loader_kwargs: Optional[dict] = None):
+        self.loader = ChunkedLoader(shard_paths, chunk_size=chunk_size,
+                                    **(loader_kwargs or {}))
+        self.family = family
+        self.b = b
+        self.use_pallas = use_pallas
+        self.kernel_seconds = 0.0
+        self.examples = 0
+
+    def __iter__(self):
+        import jax
+        from repro.kernels import batch_signatures
+        for chunk in self.loader:
+            t0 = time.perf_counter()
+            sig = batch_signatures(chunk, self.family, b=self.b,
+                                   use_pallas=self.use_pallas)
+            jax.block_until_ready(sig)
+            self.kernel_seconds += time.perf_counter() - t0
+            self.examples += chunk.n
+            yield sig, chunk.labels
+
+
 def make_sharded_dataset(spec, tmpdir: Optional[str] = None, n_shards: int = 4,
                          fmt: str = "binary", n: Optional[int] = None) -> List[str]:
     """Generate a synthetic dataset and write it as shards; returns paths."""

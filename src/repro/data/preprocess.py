@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.bbit import pack_signatures
 from repro.core.hashing import Hash2U, Hash4U
+from repro.core.oph import OPH
 from repro.data.pipeline import ChunkedLoader
 from repro.kernels import batch_signatures
 
@@ -44,11 +45,25 @@ def preprocess_shards(shard_paths: Sequence[str], out_dir: str, family, *,
                       ) -> PreprocessStats:
     """Run the full preprocessing pipeline; returns phase accounting.
 
-    family: Hash2U or Hash4U (the permutation path is deliberately not
-    offered here -- the paper's Issue 3: no permutation matrices at scale).
+    family: Hash2U / Hash4U (k-pass minwise hashing) or an ``OPH`` scheme
+    over a 2U/4U base (single-pass one-permutation hashing, ~k x fewer
+    hash evaluations).  The permutation path is deliberately not offered
+    here -- the paper's Issue 3: no permutation matrices at scale.  OPH
+    must use ``densify="rotation"``: sentinel-coded empty bins cannot be
+    bit-packed without aliasing a genuine b-bit value.  (Under rotation,
+    empty input *sets* fold to the all-ones b-bit code -- the same
+    defined value the minhash path assigns them -- so packing is always
+    well-defined.)
     """
-    if not isinstance(family, (Hash2U, Hash4U)):
-        raise TypeError("production preprocessing uses 2U/4U families")
+    if isinstance(family, OPH):
+        if not isinstance(family.base, (Hash2U, Hash4U)):
+            raise TypeError("production OPH preprocessing uses 2U/4U bases")
+        if family.densify != "rotation":
+            raise ValueError(
+                "preprocess_shards needs densify='rotation' (sentinel-coded "
+                "signatures cannot be b-bit packed unambiguously)")
+    elif not isinstance(family, (Hash2U, Hash4U)):
+        raise TypeError("production preprocessing uses 2U/4U/OPH families")
     os.makedirs(out_dir, exist_ok=True)
     stats = PreprocessStats()
     loader = ChunkedLoader(shard_paths, chunk_size=chunk_size,

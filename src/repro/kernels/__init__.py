@@ -3,11 +3,17 @@
   minhash.py  -- 2U / 4U minwise-hash signature kernels (the §3 GPU kernel,
                  re-derived for TPU: VMEM tiling, VPU lanes over hash
                  functions, running-min accumulation, in-kernel BitMod).
+  oph.py      -- One Permutation Hashing kernels: the same running-min
+                 reduction, but ONE hash evaluation per nonzero feeds all
+                 k bins (k x less hash work than minhash.py).
   sigbag.py   -- Eq.(5) signature embedding-bag as one-hot MXU matmuls.
-  ops.py      -- jitted public wrappers (padding, block choice, dispatch).
+  ops.py      -- jitted public wrappers (padding, block choice, dispatch,
+                 OPH densification epilogue).
   ref.py      -- pure-jnp oracles for allclose validation.
 """
 
-from repro.kernels.ops import batch_signatures, minhash2u, minhash4u, sigbag
+from repro.kernels.ops import (batch_signatures, minhash2u, minhash4u,
+                               oph2u, oph4u, sigbag)
 
-__all__ = ["batch_signatures", "minhash2u", "minhash4u", "sigbag"]
+__all__ = ["batch_signatures", "minhash2u", "minhash4u", "oph2u", "oph4u",
+           "sigbag"]

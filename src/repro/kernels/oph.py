@@ -1,0 +1,162 @@
+"""Pallas TPU kernels for One Permutation Hashing signatures.
+
+Same (parallel, parallel, arbitrary) running-min reduction as
+``kernels/minhash.py`` -- grid (n/BLK_N, k/BLK_K, nnz/BLK_T), the last
+axis accumulating into a revisited (BLK_N, BLK_K) output block -- but the
+hash work per nonzero collapses from k evaluations to ONE: a single 2U/4U
+function is evaluated on the (BLK_N, BLK_T) index tile, split into
+(bin, offset) bit-fields, and the offset competes only in its bin's lane
+(a lane-iota compare instead of k - 1 extra hash evaluations).
+
+Hash evaluations per nonzero = ceil(k / BLK_K): with the default BLK_K
+covering all k bins at once (k <= 512 fits one block column), that is
+literally one pass, versus k passes for the minhash kernels -- the
+paper's §3 preprocessing cost divided by k.
+
+Empty bins come out as the 0xFFFFFFFF sentinel; densification (and b-bit
+extraction, which must not destroy the sentinel before densification
+reads it) happens in the thin jnp epilogue in ``kernels/ops.py``, shared
+bit-for-bit with the ``core/oph.py`` reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import add64, mod_mersenne31, umul32_wide
+from repro.kernels.minhash import _common_grid_specs, _compiler_params
+
+_U32 = jnp.uint32
+_EMPTY = np.uint32(0xFFFFFFFF)
+
+
+def _binned_min(h, valid, out_ref, *, s: int, bin_bits: int, blk_k: int):
+    """Shared epilogue: split hash -> (bin, offset), min into bin lanes.
+
+    h: (BLK_N, BLK_T) uint32 hash values in [0, 2^s); lanes where
+    ``valid`` is False never win.  Updates the running-min out block.
+    """
+    j_step = pl.program_id(1)
+    off_bits = s - bin_bits
+    if bin_bits > 0:
+        bins = (h >> _U32(off_bits)).astype(jnp.int32)
+    else:
+        bins = jnp.zeros(h.shape, jnp.int32)
+    offs = h & _U32((1 << off_bits) - 1)
+    # lane j of this block owns global bin j_step * BLK_K + j
+    jb = (jax.lax.broadcasted_iota(jnp.int32, h.shape + (blk_k,), 2)
+          + j_step * blk_k)
+    match = (bins[..., None] == jb) & valid[..., None]
+    v = jnp.where(match, offs[..., None], _EMPTY)     # (BLK_N, BLK_T, BLK_K)
+    out_ref[...] = jnp.minimum(out_ref[...], jnp.min(v, axis=1))
+
+
+def _oph2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref, *,
+                  s: int, bin_bits: int, blk_t: int, blk_k: int,
+                  variant: str):
+    t_step = pl.program_id(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _EMPTY)
+
+    idx = idx_ref[...]                                    # (BLK_N, BLK_T) i32
+    counts = counts_ref[...]                              # (BLK_N, 1) i32
+    col = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) + t_step * blk_t
+    valid = col < counts
+
+    # ONE multiply-shift evaluation for the whole tile (scalar coefficients)
+    a1 = a1_ref[0, 0]
+    a2 = a2_ref[0, 0]
+    h = a1 + a2 * idx.astype(_U32)                        # wraps mod 2^32
+    if s < 32:
+        if variant == "high":
+            h = h >> _U32(32 - s)
+        else:
+            h = h & _U32((1 << s) - 1)
+    _binned_min(h, valid, out_ref, s=s, bin_bits=bin_bits, blk_k=blk_k)
+
+
+def _oph4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *,
+                  s: int, bin_bits: int, blk_t: int, blk_k: int):
+    t_step = pl.program_id(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _EMPTY)
+
+    idx = idx_ref[...]
+    counts = counts_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) + t_step * blk_t
+    valid = col < counts
+
+    # ONE Horner chain (scalar coefficients) with in-kernel Mersenne BitMod
+    a = a_ref[...]                                        # (4, 1) u32
+    t = idx.astype(_U32)                                  # (BLK_N, BLK_T)
+    acc = jnp.full(t.shape, a[3, 0], _U32)
+    for i in (2, 1, 0):
+        hi, lo = umul32_wide(acc, t)                      # acc * t < 2^62
+        hi, lo = add64(hi, lo, jnp.full(lo.shape, a[i, 0], _U32))
+        acc = mod_mersenne31(hi, lo)
+    if s < 31:
+        acc = acc & _U32((1 << s) - 1)
+    _binned_min(acc, valid, out_ref, s=s, bin_bits=bin_bits, blk_k=blk_k)
+
+
+def oph2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
+                 a2: jax.Array, *, s: int, bin_bits: int,
+                 blk_n: int = 8, blk_t: int = 128, blk_k: int = 128,
+                 variant: str = "high", interpret: bool = True) -> jax.Array:
+    """2U OPH: (n, nnz) indices -> (n, k_lanes) sentinel-coded bin minima.
+
+    Args:
+      indices:  (n, max_nnz) int32, padded; n, nnz, k_lanes must tile.
+      counts:   (n, 1) int32 valid-lane counts per row.
+      a1, a2:   (1,) uint32 -- the ONE multiply-shift function (a2 odd).
+      s:        D = 2^s.
+      bin_bits: log2(number of real bins); lanes >= 2^bin_bits never match
+                and come out EMPTY (callers slice them off).
+    """
+    n, nnz = indices.shape
+    k_lanes = blk_k * max(1, (1 << bin_bits) // blk_k)
+    grid, counts_spec, idx_spec, out_spec = _common_grid_specs(
+        n, nnz, k_lanes, blk_n, blk_t, blk_k)
+    coeff_spec = pl.BlockSpec((1, 1), lambda i, j, t: (0, 0))
+    kern = functools.partial(_oph2u_kernel, s=s, bin_bits=bin_bits,
+                             blk_t=blk_t, blk_k=blk_k, variant=variant)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[counts_spec, idx_spec, coeff_spec, coeff_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k_lanes), jnp.uint32),
+        interpret=interpret,
+        **_compiler_params(interpret),
+    )(counts, indices, a1.reshape(1, 1), a2.reshape(1, 1))
+
+
+def oph4u_pallas(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
+                 s: int, bin_bits: int, blk_n: int = 8, blk_t: int = 128,
+                 blk_k: int = 128, interpret: bool = True) -> jax.Array:
+    """4U OPH with in-kernel Mersenne BitMod; a: (4, 1) uint32."""
+    n, nnz = indices.shape
+    k_lanes = blk_k * max(1, (1 << bin_bits) // blk_k)
+    grid, counts_spec, idx_spec, out_spec = _common_grid_specs(
+        n, nnz, k_lanes, blk_n, blk_t, blk_k)
+    coeff_spec = pl.BlockSpec((4, 1), lambda i, j, t: (0, 0))
+    kern = functools.partial(_oph4u_kernel, s=s, bin_bits=bin_bits,
+                             blk_t=blk_t, blk_k=blk_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[counts_spec, idx_spec, coeff_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k_lanes), jnp.uint32),
+        interpret=interpret,
+        **_compiler_params(interpret),
+    )(counts, indices, a.reshape(4, 1))

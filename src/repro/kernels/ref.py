@@ -41,6 +41,38 @@ def minhash4u_ref(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
     return out
 
 
+def _oph_binned_min_ref(h: jax.Array, counts: jax.Array, *, s: int,
+                        bin_bits: int, k_lanes: int) -> jax.Array:
+    """Shared OPH oracle: hash values -> (n, k_lanes) sentinel bin minima."""
+    from repro.core.oph import split_hash
+    n, nnz = h.shape
+    col = jnp.arange(nnz)[None, :]
+    valid = col < counts                                     # (n, nnz)
+    bins, offs = split_hash(h, s, bin_bits)
+    offs = jnp.where(valid, offs, _PAD)
+    bins = jnp.where(valid, bins, 0).astype(jnp.int32)
+    return jnp.full((n, k_lanes), _PAD).at[
+        jnp.arange(n)[:, None], bins].min(offs)
+
+
+def oph2u_ref(indices: jax.Array, counts: jax.Array, a1: jax.Array,
+              a2: jax.Array, *, s: int, bin_bits: int, k_lanes: int,
+              variant: str = "high") -> jax.Array:
+    """Oracle for ``oph2u_pallas``: raw sentinel-coded bin minima."""
+    h = hash2u_apply(indices[..., None], a1, a2, s, variant)[..., 0]
+    return _oph_binned_min_ref(h, counts, s=s, bin_bits=bin_bits,
+                               k_lanes=k_lanes)
+
+
+def oph4u_ref(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
+              s: int, bin_bits: int, k_lanes: int) -> jax.Array:
+    """Oracle for ``oph4u_pallas``: raw sentinel-coded bin minima."""
+    h = hash4u_apply(indices[..., None], a[0], a[1], a[2], a[3], s,
+                     True)[..., 0]
+    return _oph_binned_min_ref(h, counts, s=s, bin_bits=bin_bits,
+                               k_lanes=k_lanes)
+
+
 def sigbag_ref(tokens: jax.Array, table: jax.Array) -> jax.Array:
     """out[i] = sum_j table[j, tokens[i, j]] (fp32 accumulation)."""
     k = tokens.shape[1]

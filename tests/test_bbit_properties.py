@@ -1,21 +1,24 @@
-"""Property tests (hypothesis) for b-bit packing / expansion / elastic."""
+"""Property tests for b-bit packing / expansion / elastic.
+
+Seeded parametrized sweeps (numpy RNG) instead of hypothesis: the same
+invariants, exercised over deterministic grids of (k, b) covering the
+word boundaries hypothesis used to hunt for.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.bbit import (expand_onehot, expand_tokens, lowest_bits,
                              pack_signatures, raw_storage_bits, storage_bits,
                              unpack_signatures, vw_storage_bits)
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.integers(1, 30), st.sampled_from([1, 2, 4, 8, 16]),
-       st.integers(0, 2**31 - 1))
-def test_pack_unpack_roundtrip(k, b, seed):
-    rng = np.random.default_rng(seed)
+@pytest.mark.parametrize("b", [1, 2, 4, 8, 16])
+@pytest.mark.parametrize("k", [1, 7, 16, 31, 32, 33])
+def test_pack_unpack_roundtrip(k, b):
+    rng = np.random.default_rng(k * 37 + b)
     sig = jnp.asarray(rng.integers(0, 1 << b, (3, k)), jnp.uint32)
     packed = pack_signatures(sig, b)
     got = unpack_signatures(packed, b, k)
@@ -24,8 +27,8 @@ def test_pack_unpack_roundtrip(k, b, seed):
     assert packed.shape[1] == -(-k * b // 32)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 12), st.integers(2, 16))
+@pytest.mark.parametrize("b", [1, 2, 3, 8, 12])
+@pytest.mark.parametrize("k", [2, 5, 16])
 def test_expansion_has_exactly_k_ones(b, k):
     rng = np.random.default_rng(b * 100 + k)
     sig = jnp.asarray(rng.integers(0, 1 << b, (2, k)), jnp.uint32)
@@ -37,8 +40,8 @@ def test_expansion_has_exactly_k_ones(b, k):
     assert int(oh[0] @ oh[1]) == matches
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 16), st.integers(1, 64))
+@pytest.mark.parametrize("b", [1, 2, 8, 16])
+@pytest.mark.parametrize("k", [1, 7, 33, 64])
 def test_tokens_are_block_disjoint(b, k):
     rng = np.random.default_rng(k)
     sig = jnp.asarray(rng.integers(0, 1 << b, (1, k)), jnp.uint32)

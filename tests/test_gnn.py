@@ -48,6 +48,7 @@ def test_gatedgcn_layer_matches_dense_oracle():
                                atol=2e-4)
 
 
+@pytest.mark.slow
 def test_edge_mask_blocks_messages():
     adj, src, dst = _toy_graph(seed=1)
     n, d = adj.shape[0], 4
@@ -67,6 +68,7 @@ def test_edge_mask_blocks_messages():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_neighbor_sampler_valid_and_static():
     rng = np.random.default_rng(2)
     n = 100
@@ -95,6 +97,7 @@ def test_neighbor_sampler_valid_and_static():
         assert s_glob in nbrs, (s_glob, d_glob)
 
 
+@pytest.mark.slow
 def test_graph_readout_shapes():
     cfg = GNNConfig("t", 2, 8, 5, 3, readout="graph")
     params = init_gnn_params(cfg, jax.random.PRNGKey(0))

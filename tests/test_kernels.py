@@ -19,9 +19,18 @@ def _case(n, nnz, k, s):
     return indices, counts
 
 
-@pytest.mark.parametrize("n,nnz,k", [(3, 100, 20), (8, 128, 128),
-                                     (17, 300, 70), (5, 513, 33)])
-@pytest.mark.parametrize("s", [12, 24, 32])
+# full (shape x s) product in the slow tier; fast tier keeps the s=24 row
+# (all padding paths) plus the aligned shape at the s extremes
+_2U_CASES = [
+    pytest.param(n, nnz, k, s,
+                 marks=[] if (s == 24 or (n, nnz, k) == (8, 128, 128))
+                 else [pytest.mark.slow])
+    for n, nnz, k in [(3, 100, 20), (8, 128, 128), (17, 300, 70),
+                      (5, 513, 33)]
+    for s in (12, 24, 32)]
+
+
+@pytest.mark.parametrize("n,nnz,k,s", _2U_CASES)
 def test_minhash2u_kernel_matches_ref(n, nnz, k, s):
     indices, counts = _case(n, nnz, k, s)
     fam = Hash2U.create(jax.random.PRNGKey(n * 1000 + k), k, s)
@@ -43,8 +52,10 @@ def test_minhash2u_fused_bbit(b):
     assert int(jnp.max(got)) < (1 << b)
 
 
-@pytest.mark.parametrize("n,nnz,k,s", [(4, 100, 16, 16), (9, 257, 40, 24),
-                                       (8, 128, 128, 30)])
+@pytest.mark.parametrize("n,nnz,k,s", [
+    (4, 100, 16, 16),
+    pytest.param(9, 257, 40, 24, marks=pytest.mark.slow),
+    (8, 128, 128, 30)])
 def test_minhash4u_kernel_matches_ref(n, nnz, k, s):
     indices, counts = _case(n, nnz, k, s)
     fam = Hash4U.create(jax.random.PRNGKey(k), k, s)
@@ -66,9 +77,18 @@ def test_kernel_vs_minhash_module():
     assert np.array_equal(np.asarray(via_kernel), np.asarray(via_module))
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("n,k,b,d", [(10, 16, 4, 8), (130, 32, 6, 32),
-                                     (64, 500, 8, 1)])
+# fast tier: fp32 small + one bf16 case; the rest of the product is slow
+_SIGBAG_FAST = {(jnp.float32, 10, 16, 4, 8), (jnp.float32, 64, 500, 8, 1),
+                (jnp.bfloat16, 130, 32, 6, 32)}
+_SIGBAG_CASES = [
+    pytest.param(dtype, n, k, b, d,
+                 marks=[] if (dtype, n, k, b, d) in _SIGBAG_FAST
+                 else [pytest.mark.slow])
+    for dtype in (jnp.float32, jnp.bfloat16)
+    for n, k, b, d in ((10, 16, 4, 8), (130, 32, 6, 32), (64, 500, 8, 1))]
+
+
+@pytest.mark.parametrize("dtype,n,k,b,d", _SIGBAG_CASES)
 def test_sigbag_kernel_matches_ref(dtype, n, k, b, d):
     tok = jnp.asarray(RNG.integers(0, 2**b, (n, k)), jnp.int32)
     table = jnp.asarray(RNG.normal(size=(k, 2**b, d)), dtype)

@@ -41,7 +41,8 @@ def test_hashed_margin_equals_explicit_expansion(tiny_data):
                                rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("kind", ["svm", "logistic"])
+@pytest.mark.parametrize(
+    "kind", ["svm", pytest.param("logistic", marks=pytest.mark.slow)])
 def test_batch_training_reaches_accuracy(tiny_data, kind):
     train, test = tiny_data
     k, b = 128, 8
@@ -58,6 +59,7 @@ def test_batch_training_reaches_accuracy(tiny_data, kind):
     assert acc > 0.9, acc
 
 
+@pytest.mark.slow
 def test_hash_families_learning_parity(tiny_data):
     """Paper Fig. 4: perm / 2U / 4U give matching accuracies (k,b large)."""
     train, test = tiny_data
@@ -99,6 +101,7 @@ def test_online_sgd_and_asgd(tiny_data):
     assert acc_last > 0.85 and acc_avg > 0.85
 
 
+@pytest.mark.slow
 def test_vw_learning(tiny_data):
     """VW baseline trains on dense hashed vectors (paper §4.2)."""
     train, test = tiny_data

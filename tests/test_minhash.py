@@ -11,8 +11,14 @@ from repro.data import word_pair_sets
 from repro.data.sparse import from_lists
 
 
-@pytest.mark.parametrize("family_kind", ["perm", "2u", "4u"])
-@pytest.mark.parametrize("R", [0.2, 0.7, 0.9])
+# perm-family cases materialize k full permutations (the paper's Issue 3)
+# and cost ~15s each; they run under -m slow, the 2U/4U cases stay fast.
+_COLLISION_CASES = [
+    pytest.param(f, R, marks=[pytest.mark.slow] if f == "perm" else [])
+    for f in ("perm", "2u", "4u") for R in (0.2, 0.7, 0.9)]
+
+
+@pytest.mark.parametrize("family_kind,R", _COLLISION_CASES)
 def test_collision_probability_estimates_resemblance(family_kind, R):
     D, k = 2**16, 1024
     s1, s2 = word_pair_sets(D, 800, 900, R, seed=42)
@@ -55,19 +61,32 @@ def test_chunked_scan_matches_direct():
     assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_2u_and_4u_agree_statistically():
-    """The paper's §4 claim at estimator level: 2U ~ 4U ~ random."""
-    D = 2**16
+    """The paper's §4 claim at estimator level: 2U ~ 4U ~ random.
+
+    Slow tier (creates k full permutations); the per-family collision
+    tests above keep estimator-level coverage in the fast tier.
+    """
+    _check_families_agree(D=2**14, s=14, k=128, tol=0.10)
+
+
+@pytest.mark.slow
+def test_2u_and_4u_agree_statistically_full():
+    _check_families_agree(D=2**16, s=16, k=512, tol=0.06)
+
+
+def _check_families_agree(D, s, k, tol):
     s1, s2 = word_pair_sets(D, 948, 940, 0.925, seed=7)  # KONG-HONG
     batch = from_lists([s1, s2])
     ests = {}
     for name, fam in [
-        ("2u", Hash2U.create(jax.random.PRNGKey(11), 512, 16)),
-        ("4u", Hash4U.create(jax.random.PRNGKey(12), 512, 16)),
-        ("perm", PermutationFamily.create(jax.random.PRNGKey(13), 512, D)),
+        ("2u", Hash2U.create(jax.random.PRNGKey(11), k, s)),
+        ("4u", Hash4U.create(jax.random.PRNGKey(12), k, s)),
+        ("perm", PermutationFamily.create(jax.random.PRNGKey(13), k, D)),
     ]:
         sig = minhash_signatures(batch.indices, batch.mask, fam)
         ests[name] = float(signature_matches(sig[0], sig[1]))
     for a in ests.values():
         for b in ests.values():
-            assert abs(a - b) < 0.06, ests
+            assert abs(a - b) < tol, ests

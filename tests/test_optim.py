@@ -86,13 +86,24 @@ def test_int8_stochastic_rounding_unbiased():
 def test_compressed_psum_matches_mean():
     devs = jax.devices()
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
     mesh = Mesh(np.array(devs[:1]), ("dp",))
     g = jnp.asarray(np.random.default_rng(2).normal(size=(64,)), jnp.float32)
 
     def f(g):
         return compressed_psum_int8(g, jax.random.PRNGKey(0), "dp")
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P()))(g)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(), out_specs=P()))(g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=0.1)
+
+
+def test_make_compressed_allreduce_helper():
+    from jax.sharding import Mesh
+    from repro.optim.compression import make_compressed_allreduce
+    mesh = Mesh(np.array(jax.devices()[:2]).reshape(2), ("dp",))
+    g = jnp.asarray(np.random.default_rng(3).normal(size=(32,)), jnp.float32)
+    f = jax.jit(make_compressed_allreduce(mesh))
+    out = f(g, jax.random.PRNGKey(1))
     np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=0.1)
 
 

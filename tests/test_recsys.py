@@ -89,7 +89,8 @@ def test_frontend_changes_logits():
     assert not np.allclose(np.asarray(l1), np.asarray(l2))
 
 
-@pytest.mark.parametrize("arch", ["din", "mind"])
+@pytest.mark.parametrize(
+    "arch", [pytest.param("din", marks=pytest.mark.slow), "mind"])
 def test_sequence_models_attend_to_history(arch):
     spec = get_arch(arch)
     cfg = spec.smoke

@@ -62,7 +62,8 @@ def test_ep_layout():
     assert ep == ("model",) and ffn == ("data",) and rest == ("data",)
 
 
-@pytest.mark.parametrize("T", [64, 6])   # a2a path and psum fallback
+@pytest.mark.parametrize(
+    "T", [64, pytest.param(6, marks=pytest.mark.slow)])  # a2a; psum fallback
 def test_moe_ep_matches_dense(mesh8, T):
     cfg = MoEConfig(n_experts=8, top_k=2, d_ff=32, n_shared=1,
                     router="sigmoid", capacity_factor=8.0)
@@ -75,6 +76,7 @@ def test_moe_ep_matches_dense(mesh8, T):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_ep_gradients(mesh8):
     cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, n_shared=0,
                     router="softmax", capacity_factor=4.0)
