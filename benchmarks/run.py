@@ -18,6 +18,7 @@ MODULES = [
     ("preprocessing_kernel", "Table 3 / Figs 1-3"),
     ("preprocessing_oph", "OPH vs §3 k-pass cost"),
     ("learning_hashfuncs", "Fig 4"),
+    ("learning_oph_parity", "Fig 4-style OPH vs minhash parity"),
     ("vw_hashfuncs", "Fig 5"),
     ("learning_scaling", "Figs 6-9"),
     ("bbit_vs_vw", "Figs 10-12"),

@@ -1,67 +1,57 @@
-"""Online learning (paper §6): SGD / ASGD over many epochs, loading data
-from disk every epoch -- demonstrating that b-bit hashing's size
-reduction cuts the dominant cost (loading).
+"""Online learning (paper §6): streaming SGD / ASGD over many epochs.
+
+Epoch 0 streams raw shards through the single-pass OPH kernel (signatures
+go straight to the SGD step, no host round-trip) while writing b-bit
+packed signature shards; epochs >= 1 replay that cache -- the paper's
+point that b-bit hashing shrinks the per-epoch loading cost that
+dominates online learning.
 
 Run:  PYTHONPATH=src python examples/online_learning.py
+Docs: docs/online_learning.md walks through this loop stage by stage.
 """
 
-import functools
-import os
-import tempfile
-
 import jax
-import numpy as np
 
-from repro.core import Hash2U, lowest_bits, minhash_signatures
 from repro.data import TINY, generate
-from repro.models.linear import (accuracy, asgd_model, sgd_svm_init,
-                                 sgd_svm_step)
-from repro.train import online_epochs
+from repro.data.pipeline import SignatureStream, make_sharded_dataset
+from repro.kernels import batch_signatures
+from repro.models.linear import accuracy
+from repro.train import OnlineTrainer, SignatureCache, make_family
 
 K, B, D_BITS = 128, 8, 16
-EPOCHS = 15
+SCHEME, DENSIFY = "oph", "rotation"   # try "2u" / "4u" / ("oph", "sentinel")
+EPOCHS = 10
 
 
 def main():
-    train, test = generate(TINY)
-    fam = Hash2U.create(jax.random.PRNGKey(0), K, D_BITS)
-    sig_tr = np.asarray(lowest_bits(
-        minhash_signatures(train.indices, train.mask, fam), B), np.uint8)
-    sig_te = lowest_bits(
-        minhash_signatures(test.indices, test.mask, fam), B)
+    shard_paths = make_sharded_dataset(TINY, n_shards=4)
+    family = make_family(jax.random.PRNGKey(0), SCHEME, K, D_BITS,
+                         densify=DENSIFY)
+    stream = SignatureStream(shard_paths, family, b=B, chunk_size=64)
+    cache = SignatureCache(stream)
 
-    tmp = tempfile.mkdtemp(prefix="repro_online_")
-    orig = os.path.join(tmp, "orig.npz")
-    np.savez(orig, idx=np.asarray(train.indices),
-             msk=np.asarray(train.mask), y=np.asarray(train.labels))
-    hashed = os.path.join(tmp, "hashed.npz")
-    np.savez(hashed, sig=sig_tr, y=np.asarray(train.labels))
-    ro, rh = os.path.getsize(orig), os.path.getsize(hashed)
-    print(f"on-disk: original={ro:,} B  hashed={rh:,} B  "
-          f"(reduction {ro / rh:.1f}x)")
+    _, test = generate(TINY)
+    sig_te = batch_signatures(test, family, b=B)
 
-    step = jax.jit(functools.partial(sgd_svm_step, lam=1e-4, eta0=0.5, b=B,
-                                     average=True))
+    trainer = OnlineTrainer(k=K, b=B, kind="svm", average=True,
+                            lam=1e-4, eta0=0.5, batch_size=16,
+                            avg_start=100.0)
+    _, stats, evals = trainer.fit(
+        cache, EPOCHS,
+        eval_fn=lambda tr: tr.evaluate(sig_te, test.labels))
 
-    def epoch_batches():
-        with np.load(hashed) as z:          # real disk read, every epoch
-            s, y = z["sig"], z["y"]
-        for i in range(0, len(y), 16):
-            yield (jax.numpy.asarray(s[i:i + 16], jax.numpy.uint32),
-                   jax.numpy.asarray(y[i:i + 16]))
-
-    state = sgd_svm_init(K * (1 << B), avg_start=100.0)
-    state, times, evals = online_epochs(
-        lambda st, batch: step(st, batch[0], batch[1]), state,
-        epoch_batches, EPOCHS,
-        eval_fn=lambda st: accuracy(st.model, sig_te, test.labels,
-                                    feature_kind="hashed", b=B))
-    for ep, (t, acc) in enumerate(zip(times, evals), 1):
-        print(f"epoch {ep:2d}: load={t.load_s * 1e3:7.1f} ms  "
-              f"train={t.train_s * 1e3:7.1f} ms  test_acc={acc:.4f}")
-    asgd_acc = accuracy(asgd_model(state), sig_te, test.labels,
-                        feature_kind="hashed", b=B)
-    print(f"final: SGD acc={evals[-1]:.4f}  ASGD acc={float(asgd_acc):.4f}")
+    print(f"scheme={SCHEME} densify={DENSIFY} k={K} b={B}")
+    print(f"on-disk: original={cache.stats.bytes_original:,} B  "
+          f"hashed={cache.stats.bytes_cached:,} B  "
+          f"(reduction {cache.stats.reduction():.1f}x)")
+    for es, acc in zip(stats, evals):
+        print(f"epoch {es.epoch:2d} [{es.source:5s}]: "
+              f"load={es.load_s * 1e3:7.1f} ms  "
+              f"train={es.train_s * 1e3:7.1f} ms  "
+              f"read={es.bytes_read:>8,} B  test_acc={acc:.4f}")
+    sgd_acc = float(accuracy(trainer.state.model, sig_te, test.labels,
+                             feature_kind="hashed", b=B))
+    print(f"final: SGD acc={sgd_acc:.4f}  ASGD acc={evals[-1]:.4f}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,18 @@ The single hash function is any of the existing families from
 a true random permutation); ``family_storage_bytes`` then shows the
 paper's Issue-3 win at its extreme: 8-16 bytes of coefficients total.
 
+Paper mapping:
+  * §3 (cost model): ``hash_evaluations`` -- k-pass minhash does
+    ``n * nnz * k`` evaluations, OPH does ``n * nnz`` (ratio exactly k),
+  * arXiv:1208.1259 (Li-Owen-Zhang) §3: ``oph_signatures`` (binned
+    minima) and the unbiased ``oph_match_fraction`` estimator
+    R^ = N_match / (k - N_jointly_empty),
+  * Shrivastava-Li ICML 2014, Eq. (7)-(9): ``densify_rotation``
+    (circular borrow, offset by distance * C so borrows never alias),
+  * main paper Eq. (2): after rotation densification the same-bin
+    collision probability is R, so §4-§6 (b-bit + learning) apply
+    unchanged.
+
 This module is the jnp reference; ``repro.kernels.oph`` holds the Pallas
 TPU kernels validated bit-exactly against it.
 """

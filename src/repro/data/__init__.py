@@ -2,11 +2,12 @@ from repro.data.sparse import SparseBatch, from_lists, to_dense, slice_batch
 from repro.data.synthetic import (DatasetSpec, RCV1_LIKE, TABLE5_PAIRS, TINY,
                                   WEBSPAM_LIKE, generate, word_pair_sets)
 from repro.data.pipeline import (ChunkedLoader, LoaderStats, SignatureStream,
-                                 make_sharded_dataset, write_shards)
+                                 batch_to_shards, make_sharded_dataset,
+                                 write_shards)
 
 __all__ = [
     "SparseBatch", "from_lists", "to_dense", "slice_batch", "DatasetSpec",
     "RCV1_LIKE", "TABLE5_PAIRS", "TINY", "WEBSPAM_LIKE", "generate",
     "word_pair_sets", "ChunkedLoader", "LoaderStats", "SignatureStream",
-    "make_sharded_dataset", "write_shards",
+    "batch_to_shards", "make_sharded_dataset", "write_shards",
 ]

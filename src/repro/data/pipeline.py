@@ -11,6 +11,11 @@ Responsibilities:
     the next healthy worker (bookkeeping mirrors what a real multi-host
     data service does; on one host the "workers" are reader threads),
   * load-time accounting consumed by the online-learning benchmarks.
+
+The prefetch (``prefetch_iter``) and retry (``read_with_retries``)
+machinery is shared with the signature-cache replay path in
+``repro.train.online``, so hashed-shard epochs get the same straggler
+story as raw-shard epochs.
 """
 
 from __future__ import annotations
@@ -93,6 +98,100 @@ class LoaderStats:
     bytes_read: int = 0
     straggler_retries: int = 0
     shard_reassignments: int = 0
+    io_errors: int = 0
+
+
+def read_with_retries(reader, path: str, stats: LoaderStats, *,
+                      deadline: float, max_retries: int):
+    """Straggler/IO-aware shard read, shared by ``ChunkedLoader`` and the
+    signature-cache replay path (``repro.train.online.SignatureCache``).
+
+    Every attempt is accounted: an ``OSError`` bumps ``stats.io_errors``
+    and is retried; a read slower than ``deadline`` bumps
+    ``stats.straggler_retries`` (the last slow attempt is kept and counted
+    as a ``shard_reassignment``).  If all ``max_retries + 1`` attempts
+    raise, the last ``OSError`` propagates -- there is no silent
+    unaccounted re-read.
+    """
+    last_err: Optional[OSError] = None
+    for attempt in range(max_retries + 1):
+        t0 = time.perf_counter()
+        try:
+            out = reader(path)
+        except OSError as e:
+            stats.io_errors += 1
+            last_err = e
+            continue
+        dt = time.perf_counter() - t0
+        if dt > deadline:
+            if attempt < max_retries:
+                # too slow: count as straggler, retry (a real service
+                # would hedge the read against a replica)
+                stats.straggler_retries += 1
+                continue
+            # retries exhausted: shard is handed to the next worker
+            stats.shard_reassignments += 1
+        stats.load_seconds += dt
+        stats.bytes_read += os.path.getsize(path)
+        return out
+    assert last_err is not None
+    raise last_err
+
+
+def prefetch_iter(make_iter, prefetch: int):
+    """Double-buffered background prefetch over any chunk iterator.
+
+    Runs ``make_iter()`` in a daemon thread, keeping up to ``prefetch``
+    items ahead of the consumer (overlap load with compute).  Exceptions
+    in the producer propagate to the consumer; abandoning the consumer
+    mid-iteration (generator close) stops the producer thread instead of
+    leaving it blocked on a full queue.  ``prefetch <= 0`` iterates
+    inline.
+    """
+    if prefetch <= 0:
+        yield from make_iter()
+        return
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    sentinel = object()
+    stop = threading.Event()
+    err: List[BaseException] = []
+
+    def put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        try:
+            for item in make_iter():
+                if not put(item):
+                    return
+        except BaseException as e:   # propagate into consumer
+            err.append(e)
+        finally:
+            put(sentinel)
+
+    t = threading.Thread(target=producer, daemon=True,
+                         name="prefetch-producer")
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is sentinel:
+                break
+            yield item
+        t.join()
+        if err:
+            raise err[0]
+    finally:
+        # also runs on generator close (abandoned consumer): joining here
+        # guarantees the producer no longer touches shared loader stats
+        stop.set()
+        t.join()
 
 
 class ChunkedLoader:
@@ -124,27 +223,9 @@ class ChunkedLoader:
 
     # -- straggler-aware shard read ------------------------------------
     def _read_shard(self, path: str, worker: int):
-        for attempt in range(self.max_retries + 1):
-            t0 = time.perf_counter()
-            try:
-                out = self._reader(path)
-            except OSError:
-                self.stats.straggler_retries += 1
-                continue
-            dt = time.perf_counter() - t0
-            if dt > self.deadline:
-                if attempt < self.max_retries:
-                    # too slow: count as straggler, retry (a real service
-                    # would hedge the read against a replica)
-                    self.stats.straggler_retries += 1
-                    continue
-                # retries exhausted: shard is handed to the next worker
-                self.stats.shard_reassignments += 1
-            self.stats.load_seconds += dt
-            self.stats.bytes_read += os.path.getsize(path)
-            return out
-        # unreadable after all retries: surface the IO error
-        return self._reader(path)
+        return read_with_retries(self._reader, path, self.stats,
+                                 deadline=self.deadline,
+                                 max_retries=self.max_retries)
 
     def _chunk_iter(self) -> Iterator[SparseBatch]:
         pending_sets: List[np.ndarray] = []
@@ -168,32 +249,7 @@ class ChunkedLoader:
                           max_nnz=self.max_nnz, lane_multiple=self.lane_multiple)
 
     def __iter__(self) -> Iterator[SparseBatch]:
-        if self.prefetch <= 0:
-            yield from self._chunk_iter()
-            return
-        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
-        sentinel = object()
-        err: List[BaseException] = []
-
-        def producer():
-            try:
-                for item in self._chunk_iter():
-                    q.put(item)
-            except BaseException as e:   # propagate into consumer
-                err.append(e)
-            finally:
-                q.put(sentinel)
-
-        t = threading.Thread(target=producer, daemon=True)
-        t.start()
-        while True:
-            item = q.get()
-            if item is sentinel:
-                break
-            yield item
-        t.join()
-        if err:
-            raise err[0]
+        yield from prefetch_iter(self._chunk_iter, self.prefetch)
 
 
 class SignatureStream:
@@ -218,6 +274,14 @@ class SignatureStream:
         self.kernel_seconds = 0.0
         self.examples = 0
 
+    @property
+    def cumulative_stats(self) -> dict:
+        """Monotone counters for per-epoch delta accounting (the protocol
+        ``repro.train.online.OnlineTrainer`` reads from any chunk source)."""
+        return {"kernel_s": self.kernel_seconds,
+                "bytes_read": self.loader.stats.bytes_read,
+                "source": "hash"}
+
     def __iter__(self):
         import jax
         from repro.kernels import batch_signatures
@@ -231,14 +295,19 @@ class SignatureStream:
             yield sig, chunk.labels
 
 
+def batch_to_shards(batch: SparseBatch, out_dir: str, n_shards: int = 4,
+                    fmt: str = "binary") -> List[str]:
+    """Write a SparseBatch back out as raw disk shards; returns paths."""
+    idx = np.asarray(batch.indices)
+    msk = np.asarray(batch.mask)
+    sets = [idx[i][msk[i]].astype(np.int64) for i in range(batch.n)]
+    return write_shards(sets, np.asarray(batch.labels), out_dir, n_shards, fmt)
+
+
 def make_sharded_dataset(spec, tmpdir: Optional[str] = None, n_shards: int = 4,
                          fmt: str = "binary", n: Optional[int] = None) -> List[str]:
     """Generate a synthetic dataset and write it as shards; returns paths."""
     from repro.data.synthetic import generate
     train, _ = generate(spec, n=n)
-    idx = np.asarray(train.indices)
-    msk = np.asarray(train.mask)
-    sets = [idx[i][msk[i]].astype(np.int64) for i in range(train.n)]
-    labels = np.asarray(train.labels)
     out_dir = tmpdir or tempfile.mkdtemp(prefix=f"repro_{spec.name}_")
-    return write_shards(sets, labels, out_dir, n_shards, fmt)
+    return batch_to_shards(train, out_dir, n_shards, fmt)

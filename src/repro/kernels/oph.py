@@ -17,6 +17,15 @@ Empty bins come out as the 0xFFFFFFFF sentinel; densification (and b-bit
 extraction, which must not destroy the sentinel before densification
 reads it) happens in the thin jnp epilogue in ``kernels/ops.py``, shared
 bit-for-bit with the ``core/oph.py`` reference.
+
+Paper mapping:
+  * §3.2-§3.3 (the GPU chunk kernel, re-derived for TPU): grid layout,
+    VMEM tiling, running-min accumulation over the nnz axis,
+  * Eq. (10) / §3.4: the in-kernel 2U multiply-shift (``_oph2u_kernel``)
+    and 4U Horner + Mersenne ``BitMod`` (``_oph4u_kernel``) -- identical
+    arithmetic to ``kernels/minhash.py``, evaluated ONCE per nonzero,
+  * arXiv:1208.1259 §3: the bin/offset bit-split (``_binned_min``), high
+    bits select the bin, low bits compete in the running min.
 """
 
 from __future__ import annotations

@@ -10,6 +10,17 @@ The paper's learning layer (§1.2, §5, §6):
   * also usable on dense features (VW-hashed vectors, original data) for
     the paper's baselines.
 
+Paper mapping:
+  * Eq. (5): ``hashed_margin`` / the implicit expansion via
+    ``repro.core.bbit.expand_tokens``,
+  * Eq. (6)-(7): ``svm_objective`` / ``logistic_objective``,
+  * §6, Eq. (11)-(12): ``sgd_svm_step`` (Bottou schedule), §6.3 ASGD via
+    ``average=True`` + ``asgd_model``,
+  * arXiv:1208.1259 (One Permutation Hashing): sentinel-densified OPH
+    signatures carry EMPTY bins; both the margin and the gradient
+    *zero-code* them (an empty bin contributes nothing to Eq. 5), so
+    ``densify="sentinel"`` trains without densification.
+
 Feature scaling: as in [27], each expanded vector has exactly k ones, so
 we scale by 1/sqrt(k) to unit-norm the features (keeps C comparable
 across k).
@@ -37,12 +48,24 @@ class LinearModel:
         return LinearModel(w=jnp.zeros((dim,), dtype), bias=jnp.zeros((), dtype))
 
 
+def _valid_tokens(sig_b: jax.Array, b: int) -> tuple[jax.Array, jax.Array]:
+    """(tokens, validity) for Eq.(5): EMPTY bins (>= 2^b, OPH sentinel
+    densification) are zero-coded -- token 0 with validity False."""
+    if b >= 32:
+        valid = jnp.ones(sig_b.shape, bool)
+    else:
+        valid = sig_b.astype(jnp.uint32) < jnp.uint32(1 << b)
+    tok = expand_tokens(jnp.where(valid, sig_b, 0).astype(sig_b.dtype), b)
+    return tok, valid
+
+
 def hashed_margin(model: LinearModel, sig_b: jax.Array, b: int) -> jax.Array:
     """w . phi(x) for the implicit Eq.(5) expansion; (n,) scores."""
     k = sig_b.shape[-1]
-    tok = expand_tokens(sig_b, b)                      # (n, k)
+    tok, valid = _valid_tokens(sig_b, b)               # (n, k)
     scale = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
-    return jnp.sum(model.w[tok], axis=-1) * scale + model.bias
+    return jnp.sum(jnp.where(valid, model.w[tok], 0.0), axis=-1) * scale \
+        + model.bias
 
 
 def dense_margin(model: LinearModel, x: jax.Array) -> jax.Array:
@@ -130,10 +153,12 @@ def sgd_svm_step(state: SGDState, feats: jax.Array, y: jax.Array, *,
         coef = coef / y.shape[0]
         if feature_kind == "hashed":
             k = feats.shape[-1]
-            tok = expand_tokens(feats, b)
+            tok, valid = _valid_tokens(feats, b)
             scale = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
             gw = jnp.zeros_like(mod.w).at[tok].add(
-                jnp.broadcast_to(coef[:, None] * scale, tok.shape))
+                jnp.where(valid,
+                          jnp.broadcast_to(coef[:, None] * scale, tok.shape),
+                          0.0))
         else:
             gw = feats.T @ coef
         return gw, jnp.sum(coef)

@@ -1,0 +1,323 @@
+"""Fused streaming online learning: OPH/minhash front half -> SGD, no
+host round-trip (paper §6 + One Permutation Hashing, arXiv:1208.1259).
+
+The paper's online-learning argument is about *per-epoch data cost*:
+SGD/ASGD needs 10-100 passes, the data does not fit in memory, so every
+epoch pays the loading bill -- and b-bit hashing shrinks that bill by the
+Table-2/§6 storage reduction.  This module makes the repo's training
+entry points actually live that loop instead of round-tripping signatures
+through ad-hoc ``.npz`` files:
+
+  * ``SignatureCache`` -- wraps a ``SignatureStream``.  Epoch 0 streams
+    raw shards through the hash kernel (one pass, signatures go straight
+    to the SGD step on device) while writing b-bit-*packed* signature
+    shards to disk; it records original-vs-hashed bytes (the Table-2/§6
+    reduction).  Epochs >= 1 replay the packed shards with the same
+    prefetch + straggler/IO-retry machinery as ``ChunkedLoader``
+    (``read_with_retries`` / ``prefetch_iter`` are shared), unpacking the
+    b-bit words *on device* -- the host only ever moves k*b bits per
+    example.
+  * ``OnlineTrainer`` -- consumes a ``SignatureStream`` or a
+    ``SignatureCache`` (anything yielding ``(signatures, labels)``
+    chunks), runs the Bottou SGD / ASGD / logistic-regression update with
+    a donated state buffer, and accounts an ``EpochStats`` per epoch
+    (load / kernel / train seconds, bytes, examples) -- the quantities
+    behind Figures 13-16/19 and Table 4.
+  * ``make_family`` -- one switch over the paper's hashing schemes:
+    ``"2u"`` / ``"4u"`` (k-pass minwise) and ``"oph"`` / ``"oph-4u"``
+    (single-pass one-permutation hashing, x ``densify=``).
+
+Paper mapping:
+  * §6, Eq. 11-12: the SGD/ASGD update (via ``repro.models.linear``).
+  * §6.1 + Table 2: epoch-0 vs replay bytes (``CacheStats.reduction``).
+  * Figs 13-15, 19: accuracy-vs-epoch curves (``OnlineTrainer.fit`` with
+    ``eval_fn``); Figs 16, 18 + Table 4: ``EpochStats`` load/train split.
+  * arXiv:1208.1259 (Li-Owen-Zhang): the OPH front half; empty bins under
+    ``densify="sentinel"`` are zero-coded by the learning layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import tempfile
+import time
+from typing import Callable, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bbit import pack_signatures, unpack_signatures
+from repro.core.hashing import Hash2U, Hash4U
+from repro.core.oph import EMPTY, OPH
+from repro.data.pipeline import (LoaderStats, SignatureStream, prefetch_iter,
+                                 read_with_retries)
+from repro.models.linear import (accuracy, asgd_model, sgd_svm_init,
+                                 sgd_svm_step)
+
+
+def make_family(key: jax.Array, scheme: str, k: int, s: int, *,
+                densify: str = "rotation", variant: str = "high"):
+    """Build a hashing scheme for the online-learning front half.
+
+    ``scheme``: ``"2u"`` / ``"4u"`` are the k-pass minwise families
+    (k hash evaluations per nonzero); ``"oph"`` (2U base) / ``"oph-4u"``
+    are single-pass one-permutation hashing (ONE evaluation per nonzero,
+    k bins).  ``densify`` applies to the OPH schemes only: ``"rotation"``
+    (Shrivastava-Li, signatures behave like minhash) or ``"sentinel"``
+    (empty bins stay EMPTY; the learning layer zero-codes them).
+    """
+    if scheme == "2u":
+        return Hash2U.create(key, k, s, variant=variant)
+    if scheme == "4u":
+        return Hash4U.create(key, k, s)
+    if scheme in ("oph", "oph-2u"):
+        return OPH.create(key, k=k, s=s, family="2u", densify=densify,
+                          variant=variant)
+    if scheme == "oph-4u":
+        return OPH.create(key, k=k, s=s, family="4u", densify=densify)
+    raise ValueError(
+        f"scheme must be '2u', '4u', 'oph'/'oph-2u' or 'oph-4u', got {scheme!r}")
+
+
+# ---------------------------------------------------------------------------
+# SignatureCache: hash once, replay b-bit-packed shards every later epoch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheStats:
+    """Epoch-0 accounting: what the cache cost and what it saves."""
+
+    bytes_original: int = 0      # raw shard bytes read to build the cache
+    bytes_cached: int = 0        # packed signature shard bytes written
+    shards: int = 0
+    examples: int = 0
+    write_s: float = 0.0
+
+    def reduction(self) -> float:
+        """Original/hashed size ratio -- the paper's Table-2/§6 number."""
+        return self.bytes_original / max(self.bytes_cached, 1)
+
+
+class SignatureCache:
+    """Hash on epoch 0, replay b-bit-packed signature shards afterwards.
+
+    Iterating yields ``(signatures, labels)`` chunks exactly like the
+    wrapped ``SignatureStream``; the first full pass additionally writes
+    each chunk as a packed shard under ``cache_dir`` (bit-exact: replayed
+    signatures equal the fresh stream's output).  Replay uses the same
+    prefetch and straggler/IO-retry machinery as ``ChunkedLoader``
+    (``replay_stats`` is a ``LoaderStats``), and unpacks the b-bit words
+    on device so host->device traffic is k*b bits per example.
+
+    Packing: b-bit values pack into uint32 words when ``b | 32``.
+    Sentinel-densified OPH signatures carry the EMPTY marker, which is
+    stored as the value ``2^b`` in the smallest integer dtype that fits
+    (no uint32 packing) and restored to EMPTY on replay.
+    """
+
+    def __init__(self, stream: SignatureStream, cache_dir: Optional[str] = None,
+                 *, prefetch: int = 2, straggler_deadline_s: float = 30.0,
+                 max_retries: int = 2):
+        self.stream = stream
+        self.b = stream.b
+        fam = stream.family
+        self.sentinel = isinstance(fam, OPH) and fam.densify == "sentinel"
+        self.pack = (not self.sentinel) and 0 < self.b and 32 % self.b == 0
+        self.cache_dir = cache_dir or tempfile.mkdtemp(prefix="repro_sigcache_")
+        os.makedirs(self.cache_dir, exist_ok=True)
+        self.prefetch = prefetch
+        self.deadline = straggler_deadline_s
+        self.max_retries = max_retries
+        self.populated = False
+        self.paths: List[str] = []
+        self.stats = CacheStats()
+        self.replay_stats = LoaderStats()
+
+    # -- stats protocol (read by OnlineTrainer as per-epoch deltas) -----
+    @property
+    def cumulative_stats(self) -> dict:
+        return {"kernel_s": self.stream.kernel_seconds,
+                "bytes_read": (self.stream.loader.stats.bytes_read
+                               + self.replay_stats.bytes_read),
+                "source": "cache" if self.populated else "hash"}
+
+    def __iter__(self):
+        if self.populated:
+            yield from self._replay()
+        else:
+            yield from self._populate()
+
+    # -- epoch 0: hash + write-through ---------------------------------
+    def _encode(self, sig: jax.Array) -> Tuple[np.ndarray, bool]:
+        """Device signatures -> host array for storage; returns (data, packed)."""
+        if self.pack:
+            return np.asarray(pack_signatures(sig, self.b)), True
+        host = np.asarray(sig).astype(np.uint32)
+        span = (1 << self.b) + 1 if self.b > 0 else 1 << 32  # values + EMPTY code
+        if self.sentinel and self.b > 0:
+            host = np.where(host == np.uint32(EMPTY),
+                            np.uint32(1 << self.b), host)
+        dtype = (np.uint8 if span <= 1 << 8 else
+                 np.uint16 if span <= 1 << 16 else np.uint32)
+        return host.astype(dtype), False
+
+    def _populate(self):
+        # a partially-consumed epoch-0 pass may have written some shards
+        # and read some raw bytes already; restart the accounting so
+        # replay never sees duplicates and the reduction stays honest
+        self.paths = []
+        self.stats = CacheStats()
+        raw_bytes_before = self.stream.loader.stats.bytes_read
+        for i, (sig, labels) in enumerate(self.stream):
+            t0 = time.perf_counter()
+            data, packed = self._encode(sig)
+            path = os.path.join(self.cache_dir, f"sig_{i:05d}.npz")
+            np.savez(path, data=data, labels=np.asarray(labels),
+                     k=np.int32(sig.shape[1]), b=np.int32(self.b),
+                     packed=packed, sentinel=self.sentinel)
+            self.paths.append(path)
+            self.stats.bytes_cached += os.path.getsize(path)
+            self.stats.shards += 1
+            self.stats.examples += sig.shape[0]
+            self.stats.write_s += time.perf_counter() - t0
+            yield sig, labels
+        self.stats.bytes_original = (self.stream.loader.stats.bytes_read
+                                     - raw_bytes_before)
+        self.populated = True
+
+    # -- epochs >= 1: replay packed shards -----------------------------
+    @staticmethod
+    def _read_host(path: str) -> dict:
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+
+    def _decode(self, payload: dict) -> Tuple[jax.Array, jax.Array]:
+        k, b = int(payload["k"]), int(payload["b"])
+        data = jnp.asarray(payload["data"])          # packed words on device
+        if bool(payload["packed"]):
+            sig = unpack_signatures(data, b, k)
+        else:
+            sig = data.astype(jnp.uint32)
+            if bool(payload["sentinel"]) and b > 0:
+                sig = jnp.where(sig == jnp.uint32(1 << b), EMPTY, sig)
+        return sig, jnp.asarray(payload["labels"])
+
+    def _replay(self):
+        def chunks():
+            for path in self.paths:
+                yield read_with_retries(self._read_host, path,
+                                        self.replay_stats,
+                                        deadline=self.deadline,
+                                        max_retries=self.max_retries)
+        for payload in prefetch_iter(chunks, self.prefetch):
+            yield self._decode(payload)
+
+
+# ---------------------------------------------------------------------------
+# OnlineTrainer: the §6 epoch loop over any (signatures, labels) source
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EpochStats:
+    """Per-epoch accounting (the split behind Figs 16/18 and Table 4).
+
+    ``load_s`` is time the trainer waited on the source -- on a "hash"
+    epoch that includes the hashing kernel (``kernel_s`` reports the
+    device portion separately); on a "cache" epoch it is pure replay I/O.
+    """
+
+    epoch: int
+    source: str                  # "hash" (fresh stream) | "cache" (replay)
+    load_s: float = 0.0
+    kernel_s: float = 0.0
+    train_s: float = 0.0
+    bytes_read: int = 0
+    examples: int = 0
+
+
+@dataclasses.dataclass
+class OnlineTrainer:
+    """Streaming SGD / ASGD / logistic regression on b-bit signatures.
+
+    ``fit`` consumes chunked ``(signatures, labels)`` sources -- a
+    ``SignatureStream`` (hash every epoch) or a ``SignatureCache`` (hash
+    once, replay packed shards) -- and runs the Bottou update
+    (Eq. 11-12) mini-batch by mini-batch with the SGD state donated to
+    the jitted step, so the weights never leave the device.
+
+    ``kind``: ``"svm"`` (Eq. 6 hinge) or ``"logistic"`` (Eq. 7);
+    ``average=True`` maintains the §6.3 ASGD iterate average and makes
+    ``model``/``evaluate`` use it.
+    """
+
+    k: int
+    b: int
+    kind: str = "svm"
+    average: bool = False
+    lam: float = 1e-4
+    eta0: float = 0.5
+    batch_size: int = 16
+    avg_start: float = 0.0
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("svm", "logistic"):
+            raise ValueError(f"kind must be 'svm' or 'logistic', got {self.kind!r}")
+        self.dim = self.k * (1 << self.b)
+        step = functools.partial(sgd_svm_step, lam=self.lam, eta0=self.eta0,
+                                 b=self.b, feature_kind="hashed",
+                                 kind=self.kind, average=self.average)
+        self._step = (jax.jit(step, donate_argnums=(0,)) if self.donate
+                      else jax.jit(step))
+        self.state = sgd_svm_init(self.dim, avg_start=self.avg_start)
+        self.epoch_stats: List[EpochStats] = []
+
+    @property
+    def model(self):
+        return asgd_model(self.state) if self.average else self.state.model
+
+    def evaluate(self, sig_b: jax.Array, labels: jax.Array) -> float:
+        return float(accuracy(self.model, sig_b, labels,
+                              feature_kind="hashed", b=self.b))
+
+    def fit(self, source: Iterable, n_epochs: int,
+            eval_fn: Optional[Callable[["OnlineTrainer"], float]] = None
+            ) -> Tuple[object, List[EpochStats], List[float]]:
+        """Run ``n_epochs`` passes over ``source``.
+
+        Returns ``(final SGDState, this call's per-epoch EpochStats,
+        this call's per-epoch evals)`` -- the two lists always align;
+        ``eval_fn`` (if given) is called with the trainer after each
+        epoch.  ``self.epoch_stats`` accumulates across ``fit`` calls so
+        a warm trainer can keep training.
+        """
+        evals: List[float] = []
+        first = len(self.epoch_stats)
+        for _ in range(n_epochs):
+            before = dict(getattr(source, "cumulative_stats", None) or {})
+            es = EpochStats(epoch=len(self.epoch_stats),
+                            source=before.get("source", "stream"))
+            t_mark = time.perf_counter()
+            for sig, labels in source:
+                t_loaded = time.perf_counter()
+                es.load_s += t_loaded - t_mark
+                sig = jnp.asarray(sig)
+                y = jnp.asarray(labels)
+                n = sig.shape[0]
+                for i in range(0, n, self.batch_size):
+                    self.state = self._step(self.state,
+                                            sig[i:i + self.batch_size],
+                                            y[i:i + self.batch_size])
+                jax.block_until_ready(self.state.model.w)
+                es.examples += n
+                t_mark = time.perf_counter()
+                es.train_s += t_mark - t_loaded
+            after = dict(getattr(source, "cumulative_stats", None) or {})
+            es.kernel_s = after.get("kernel_s", 0.0) - before.get("kernel_s", 0.0)
+            es.bytes_read = after.get("bytes_read", 0) - before.get("bytes_read", 0)
+            self.epoch_stats.append(es)
+            evals.append(float(eval_fn(self)) if eval_fn else float("nan"))
+        return self.state, self.epoch_stats[first:], evals

@@ -60,6 +60,42 @@ def test_straggler_detection_counters(tmp_path):
     assert loader.stats.shard_reassignments == 2
 
 
+def test_read_shard_oserror_accounted(tmp_path):
+    """Flaky reads retry with accounting; exhausted retries raise."""
+    sets, labels = _toy_sets(20)
+    paths = write_shards(sets, labels, str(tmp_path), n_shards=1)
+    loader = ChunkedLoader(paths, chunk_size=20, prefetch=0, max_retries=2,
+                           lane_multiple=8)
+    real_reader = loader._reader
+    fails = {"n": 2}
+
+    def flaky(path):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient read failure")
+        return real_reader(path)
+
+    loader._reader = flaky
+    chunks = list(loader)
+    assert sum(c.n for c in chunks) == 20
+    assert loader.stats.io_errors == 2
+    # the successful attempt is fully accounted (no silent re-read)
+    assert loader.stats.load_seconds > 0 and loader.stats.bytes_read > 0
+
+    # every attempt failing must surface the OSError, all attempts counted
+    dead = ChunkedLoader(paths, chunk_size=20, prefetch=0, max_retries=1,
+                         lane_multiple=8)
+
+    def always_fails(path):
+        raise OSError("gone")
+
+    dead._reader = always_fails
+    with pytest.raises(OSError):
+        list(dead)
+    assert dead.stats.io_errors == 2  # max_retries + 1 attempts
+    assert dead.stats.bytes_read == 0
+
+
 def test_make_sharded_dataset(tmp_path):
     paths = make_sharded_dataset(TINY, str(tmp_path), n_shards=3, n=60)
     assert len(paths) == 3

@@ -1,0 +1,50 @@
+"""Check that all relative markdown links in README.md and docs/ resolve.
+
+Usage:  python tools/check_links.py [files...]
+No dependencies; exits 1 listing any link whose target does not exist.
+External links (http/https/mailto) and pure in-page anchors are skipped.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) -- target captured up to the closing paren (no nesting)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path) as f:
+        text = FENCE_RE.sub("", f.read())   # link syntax in code blocks
+                                            # is illustrative, not a link
+    base = os.path.dirname(os.path.abspath(path))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]        # drop in-page anchor
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = argv or sorted({"README.md", *glob.glob("docs/*.md")})
+    all_errors = []
+    for path in files:
+        all_errors.extend(check_file(path))
+    for err in all_errors:
+        print(err, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not all_errors else f'{len(all_errors)} broken links'}")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
