@@ -56,7 +56,7 @@ def run() -> list[Row]:
         evals_oph = hash_evaluations(N, AVG_NNZ, k, "oph")
         # the kernel evaluates its ONE function once per BLK_K lane block;
         # derive the pass count from the wrapper's actual block choice
-        from repro.kernels.ops import _oph_lanes
+        from repro.kernels.engine import _oph_lanes
         k_lanes, blk_k = _oph_lanes(k, 0)
         kernel_passes = k_lanes // blk_k
         rows.append((f"oph/k_{k}", t_oph, {

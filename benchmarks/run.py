@@ -1,7 +1,11 @@
 """Benchmark harness: one module per paper table/figure.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME...]]
 Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+``--only`` with a single token is a substring filter (legacy behaviour);
+a comma-separated list selects exact module names and errors on unknown
+ones (no more silently matching nothing on a typo).
 """
 
 from __future__ import annotations
@@ -25,18 +29,37 @@ MODULES = [
     ("online_learning", "Figs 13-15, 19"),
     ("loading_time", "Figs 16, 18 / Table 4"),
     ("resemblance_mse", "Figs 20-22 / App. A"),
+    ("signature_engine", "§6 / Table 2 wire format"),
 ]
+
+
+def _selector(only):
+    """--only matcher: single token = substring, comma list = exact names."""
+    if not only:
+        return lambda name: True
+    tokens = [t.strip() for t in only.split(",") if t.strip()]
+    if len(tokens) > 1:
+        known = {name for name, _ in MODULES}
+        unknown = [t for t in tokens if t not in known]
+        if unknown:
+            raise SystemExit(f"--only: unknown module(s) {unknown}; "
+                             f"available: {sorted(known)}")
+        return lambda name: name in tokens
+    return lambda name: tokens[0] in name
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="substring filter, or comma-separated exact "
+                         "module names")
     args = ap.parse_args()
+    selected = _selector(args.only)
 
     all_rows = []
     failures = []
     for mod_name, paper_ref in MODULES:
-        if args.only and args.only not in mod_name:
+        if not selected(mod_name):
             continue
         t0 = time.perf_counter()
         try:

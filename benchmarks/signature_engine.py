@@ -1,0 +1,114 @@
+"""SignatureEngine wire-format benchmark: host-transfer bytes + pack cost.
+
+The §6/Table-2 systems claim, measured on the engine: signatures leave
+the device as packed words (k*b bits per example, (b+1)-bit codes for
+sentinel OPH), so the host transfer, the cache shards and every replay
+epoch pay the paper's bit budget instead of k uint32 lanes.  Reports
+
+  * packed vs unpacked kernel wall time (the pack overhead),
+  * host-transfer bytes per example for both paths,
+  * replayed ``.sig`` cache payload for sentinel-OPH b=8 against the
+    uint32-shard baseline -- the acceptance bound is (b+1)/32.
+
+``--json PATH`` additionally writes the rows as a JSON artifact (the
+slow-tier CI job uploads it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, bench_dataset, fmt_rows, time_fn
+from repro.data.pipeline import SignatureStream, batch_to_shards
+from repro.kernels import SignatureEngine
+from repro.train import SignatureCache, make_family
+
+D_BITS = 16
+K, B = 128, 8
+N = 512
+
+
+def _engine_rows(family, name: str) -> list[Row]:
+    train, _ = bench_dataset(n=N, D=2**D_BITS, avg_nnz=96, seed=11)
+    unpacked = SignatureEngine(family, b=B)
+    packed = SignatureEngine(family, b=B, packed=True)
+    t_unpacked = time_fn(lambda: unpacked.signatures(train))
+    t_packed = time_fn(lambda: packed.packed_signatures(train).data)
+    sig = unpacked.signatures(train)
+    wire = packed.packed_signatures(train)
+    n = sig.shape[0]
+    bytes_unpacked = int(np.asarray(sig).nbytes)
+    bytes_packed = wire.nbytes
+    return [
+        (f"engine/{name}/pack_overhead", t_packed, {
+            "unpacked_us": round(t_unpacked, 1),
+            "overhead_pct": round(100.0 * (t_packed - t_unpacked)
+                                  / max(t_unpacked, 1e-9), 1)}),
+        (f"engine/{name}/host_bytes_per_example", 0.0, {
+            "unpacked": bytes_unpacked // n,
+            "packed": bytes_packed // n,
+            "reduction_x": round(bytes_unpacked / max(bytes_packed, 1), 2),
+            "code_bits": wire.code_bits}),
+    ]
+
+
+def _cache_rows() -> list[Row]:
+    """Replayed sentinel-OPH b=8 cache payload vs the uint32 baseline."""
+    train, _ = bench_dataset(n=N, D=2**D_BITS, avg_nnz=96, seed=11)
+    with tempfile.TemporaryDirectory(prefix="repro_engine_bench_") as raw_dir:
+        shard_paths = batch_to_shards(train, raw_dir)
+        fam = make_family(jax.random.PRNGKey(0), "oph", K, D_BITS,
+                          densify="sentinel")
+        with SignatureCache(SignatureStream(shard_paths, fam, b=B,
+                                            chunk_size=128,
+                                            packed=True)) as cache:
+            for _ in cache:                  # epoch 0: hash + write .sig
+                pass
+            replayed = 0
+            for sig, _ in cache:             # epoch 1: replayed wire bytes
+                replayed += sig.nbytes
+            n = cache.stats.examples
+            baseline = n * K * 4             # uint32 shard payload
+            ratio = cache.stats.bytes_payload / baseline
+            return [("engine/cache_sentinel_b8/replay_bytes", 0.0, {
+                "payload_bytes": cache.stats.bytes_payload,
+                "replayed_bytes": replayed,
+                "uint32_baseline_bytes": baseline,
+                "ratio": round(ratio, 4),
+                "bound": round((B + 1) / 32, 4),
+                "within_bound": ratio <= (B + 1) / 32,
+                "file_bytes": cache.stats.bytes_cached,
+                "raw_bytes": cache.stats.bytes_original})]
+
+
+def run() -> list[Row]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    rows += _engine_rows(make_family(key, "oph", K, D_BITS,
+                                     densify="sentinel"), "oph_sentinel")
+    rows += _engine_rows(make_family(key, "2u", K, D_BITS), "minhash_2u")
+    rows += _cache_rows()
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    rows = run()
+    print(fmt_rows(rows))
+    if args.json:
+        doc = [{"name": name, "us_per_call": us, **derived}
+               for name, us, derived in rows]
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,31 +27,38 @@ def main():
     shard_paths = make_sharded_dataset(TINY, n_shards=4)
     family = make_family(jax.random.PRNGKey(0), SCHEME, K, D_BITS,
                          densify=DENSIFY)
-    stream = SignatureStream(shard_paths, family, b=B, chunk_size=64)
-    cache = SignatureCache(stream)
+    # packed=True: chunks are PackedSignatures wire words (k*b bits per
+    # example); the unpack happens inside the jitted SGD step.
+    stream = SignatureStream(shard_paths, family, b=B, chunk_size=64,
+                             packed=True)
 
     _, test = generate(TINY)
     sig_te = batch_signatures(test, family, b=B)
 
-    trainer = OnlineTrainer(k=K, b=B, kind="svm", average=True,
-                            lam=1e-4, eta0=0.5, batch_size=16,
-                            avg_start=100.0)
-    _, stats, evals = trainer.fit(
-        cache, EPOCHS,
-        eval_fn=lambda tr: tr.evaluate(sig_te, test.labels))
+    # context managers: the trainer closes the cache, the cache deletes
+    # its temp shard dir (no per-run leaks)
+    with SignatureCache(stream) as cache, \
+            OnlineTrainer(k=K, b=B, kind="svm", average=True,
+                          lam=1e-4, eta0=0.5, batch_size=16,
+                          avg_start=100.0) as trainer:
+        _, stats, evals = trainer.fit(
+            cache, EPOCHS,
+            eval_fn=lambda tr: tr.evaluate(sig_te, test.labels))
 
-    print(f"scheme={SCHEME} densify={DENSIFY} k={K} b={B}")
-    print(f"on-disk: original={cache.stats.bytes_original:,} B  "
-          f"hashed={cache.stats.bytes_cached:,} B  "
-          f"(reduction {cache.stats.reduction():.1f}x)")
-    for es, acc in zip(stats, evals):
-        print(f"epoch {es.epoch:2d} [{es.source:5s}]: "
-              f"load={es.load_s * 1e3:7.1f} ms  "
-              f"train={es.train_s * 1e3:7.1f} ms  "
-              f"read={es.bytes_read:>8,} B  test_acc={acc:.4f}")
-    sgd_acc = float(accuracy(trainer.state.model, sig_te, test.labels,
-                             feature_kind="hashed", b=B))
-    print(f"final: SGD acc={sgd_acc:.4f}  ASGD acc={evals[-1]:.4f}")
+        print(f"scheme={SCHEME} densify={DENSIFY} k={K} b={B}")
+        print(f"on-disk: original={cache.stats.bytes_original:,} B  "
+              f"hashed={cache.stats.bytes_cached:,} B  "
+              f"(reduction {cache.stats.reduction():.1f}x, "
+              f"payload {cache.stats.bytes_payload:,} B = "
+              f"k*{cache.code_bits} bits/example)")
+        for es, acc in zip(stats, evals):
+            print(f"epoch {es.epoch:2d} [{es.source:5s}]: "
+                  f"load={es.load_s * 1e3:7.1f} ms  "
+                  f"train={es.train_s * 1e3:7.1f} ms  "
+                  f"read={es.bytes_read:>8,} B  test_acc={acc:.4f}")
+        sgd_acc = float(accuracy(trainer.state.model, sig_te, test.labels,
+                                 feature_kind="hashed", b=B))
+        print(f"final: SGD acc={sgd_acc:.4f}  ASGD acc={evals[-1]:.4f}")
 
 
 if __name__ == "__main__":

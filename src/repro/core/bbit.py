@@ -9,6 +9,11 @@ learning.  We provide:
   * ``lowest_bits``      -- z & (2^b - 1)
   * ``pack_signatures``  -- bit-pack b-bit values into uint32 words (the
                             storage the paper counts: k*b bits per example)
+  * ``pack_codes`` / ``unpack_codes`` -- general bitstream packing of
+                            ``code_bits``-wide codes (codes may straddle
+                            word boundaries), used for the wire format:
+                            plain signatures pack b-bit codes, sentinel
+                            OPH packs (b+1)-bit codes with EMPTY as 2^b
   * ``expand_tokens``    -- the *implicit* expansion: token ids
                             ``j * 2^b + z_j`` (a gather into a (k*2^b, ...)
                             weight table == the one-hot dot of Eq. 5)
@@ -75,6 +80,65 @@ def unpack_signatures(packed: jax.Array, b: int, k: int) -> jax.Array:
     shifts = (jnp.arange(per_word, dtype=jnp.uint32) * b).astype(jnp.uint32)
     z = (packed[..., None] >> shifts) & jnp.uint32((1 << b) - 1)
     return z.reshape(packed.shape[0], -1)[:, :k]
+
+
+def packed_words(k: int, code_bits: int) -> int:
+    """uint32 words per example for k ``code_bits``-wide codes (bitstream)."""
+    if not 1 <= code_bits <= 32:
+        raise ValueError(f"code_bits must be in [1, 32], got {code_bits}")
+    return (k * code_bits + 31) // 32
+
+
+def _code_geometry(k: int, code_bits: int):
+    """Per-code (low word index, bit shift) for the bitstream layout: code
+    j occupies bits [j*code_bits, (j+1)*code_bits) of the row's stream."""
+    j = jnp.arange(k, dtype=jnp.uint32)
+    bit0 = j * jnp.uint32(code_bits)
+    return (bit0 >> 5).astype(jnp.int32), bit0 & jnp.uint32(31)
+
+
+def pack_codes(values: jax.Array, code_bits: int) -> jax.Array:
+    """Bitstream-pack (n, k) codes (< 2^code_bits) into uint32 words.
+
+    Unlike ``pack_signatures`` this supports *any* ``code_bits`` in
+    [1, 32] (codes may straddle word boundaries) and any k, so it can
+    carry sentinel OPH signatures as (b+1)-bit codes and non-word-aligned
+    k.  Output is (n, ceil(k*code_bits/32)) -- exactly k*code_bits bits
+    per example, the paper's wire accounting.  Pure uint32 arithmetic
+    (TPU-safe, no 64-bit intermediates); jit-compatible.
+    """
+    n, k = values.shape
+    words = packed_words(k, code_bits)
+    v = values.astype(jnp.uint32)
+    if code_bits < 32:
+        v = v & jnp.uint32((1 << code_bits) - 1)
+    wlo, sh = _code_geometry(k, code_bits)
+    lo = v << sh                                # uint32 wrap: high bits drop
+    # v >> (32 - sh) without the undefined shift-by-32 at sh == 0: codes
+    # are <= 32 bits wide so two single shifts compose exactly.
+    hi = (v >> (jnp.uint32(31) - sh)) >> jnp.uint32(1)
+    out = jnp.zeros((n, words), jnp.uint32)
+    # contributions to one word occupy disjoint bit ranges, so add == or
+    out = out.at[:, wlo].add(lo)
+    out = out.at[:, jnp.minimum(wlo + 1, words - 1)].add(hi)
+    return out
+
+
+def unpack_codes(packed: jax.Array, code_bits: int, k: int) -> jax.Array:
+    """Inverse of ``pack_codes``; returns (n, k) uint32 codes."""
+    words = packed.shape[-1]
+    if words < packed_words(k, code_bits):
+        raise ValueError(
+            f"packed has {words} words, need {packed_words(k, code_bits)} "
+            f"for k={k}, code_bits={code_bits}")
+    wlo, sh = _code_geometry(k, code_bits)
+    lo = packed[:, wlo] >> sh
+    hi = (packed[:, jnp.minimum(wlo + 1, words - 1)]
+          << (jnp.uint32(31) - sh)) << jnp.uint32(1)
+    out = lo | hi
+    if code_bits < 32:
+        out = out & jnp.uint32((1 << code_bits) - 1)
+    return out
 
 
 def storage_bits(k: int, b: int) -> int:

@@ -24,6 +24,12 @@ receive no element of S are *empty*; two strategies are implemented:
     signature behaves like a standard minhash signature (same-bin
     collision probability R), so the whole b-bit / learning stack applies
     unchanged.
+  * ``densify="optimal"``: Shrivastava (ICML 2017) optimal densification
+    -- each empty bin draws donor bins from its own 2-universal probe
+    sequence (shared across sets, so matched empties stay comparable)
+    until it hits a non-empty bin, and copies that bin's value.  Breaks
+    the rotation scheme's donor correlation between neighbouring empty
+    bins, reducing estimator variance; signatures remain minhash-like.
 
 The single hash function is any of the existing families from
 ``repro.core.hashing`` instantiated with ``k == 1`` (2U / 4U /
@@ -76,7 +82,7 @@ class OPH:
 
     base: BaseFamily
     k: int                      # number of bins == signature length
-    densify: str = "rotation"   # "rotation" | "sentinel"
+    densify: str = "rotation"   # "rotation" | "sentinel" | "optimal"
 
     def __post_init__(self):
         if self.base.k != 1:
@@ -86,8 +92,9 @@ class OPH:
             raise ValueError(f"OPH needs s <= 31 (rotation offsets overflow), got {s}")
         if self.k & (self.k - 1) or not (1 <= self.k <= (1 << s)):
             raise ValueError(f"k must be a power of two in [1, 2^{s}], got {self.k}")
-        if self.densify not in ("rotation", "sentinel"):
-            raise ValueError(f"densify must be 'rotation' or 'sentinel', got {self.densify!r}")
+        if self.densify not in ("rotation", "sentinel", "optimal"):
+            raise ValueError("densify must be 'rotation', 'sentinel' or "
+                             f"'optimal', got {self.densify!r}")
 
     @property
     def s(self) -> int:
@@ -164,11 +171,28 @@ def oph_signatures(indices: jax.Array, mask: jax.Array, oph: OPH,
     bins = jnp.where(mask, bins, 0).astype(jnp.int32)
     sig = jnp.full((n, oph.k), EMPTY).at[
         jnp.arange(n)[:, None], bins].min(offs)
-    if oph.densify == "rotation":
-        sig = densify_rotation(sig, oph.bin_width)
+    return densify_and_bbit(sig, oph.bin_width, oph.densify, b)
+
+
+def densify_and_bbit(sig: jax.Array, bin_width: int, densify: str,
+                     b: int) -> jax.Array:
+    """Shared epilogue: densify sentinel-coded bin minima, extract b bits.
+
+    This is THE semantics both the jnp reference above and the kernel
+    path (``repro.kernels.engine``) apply after the raw binned minima, so
+    the two stay bit-exact by construction.  Under ``sentinel`` the EMPTY
+    marker survives the b-bit mask (the estimator / learning layer handle
+    it); under ``rotation``/``optimal`` every bin is defined except in
+    all-empty rows, which fold to the all-ones b-bit code -- the same
+    value the k-pass minhash path assigns empty sets.
+    """
+    if densify == "rotation":
+        sig = densify_rotation(sig, bin_width)
+    elif densify == "optimal":
+        sig = densify_optimal(sig)
     if b > 0:
         mask_b = _U32((1 << b) - 1)
-        if oph.densify == "rotation":
+        if densify in ("rotation", "optimal"):
             sig = sig & mask_b        # EMPTY (all-empty rows) -> 2^b - 1
         else:
             sig = jnp.where(sig != EMPTY, sig & mask_b, sig)
@@ -205,6 +229,58 @@ def densify_rotation(sig: jax.Array, bin_width: int) -> jax.Array:
     dense = jnp.where(nonempty, sig, borrowed)
     # all-empty rows: first == 2k, donor values are EMPTY-garbage -> keep EMPTY
     return jnp.where(first < 2 * k, dense, EMPTY)
+
+
+def _optimal_probe(j: jax.Array, t: jax.Array, k: int) -> jax.Array:
+    """Donor bin for (bin j, probe attempt t): a multiply-mix universal
+    hash of the unique key t*k + j.  Depends only on (j, t, k) -- the same
+    probe sequence for every set, as the optimal-densification estimator
+    requires (matched empty bins must walk the same donors)."""
+    x = t.astype(_U32) * _U32(k) + j.astype(_U32)
+    h = x * _U32(2654435761) + _U32(0x9E3779B9)       # wraps mod 2^32
+    h = h ^ (h >> _U32(16))
+    return (h % _U32(k)).astype(jnp.int32)
+
+
+def densify_optimal(sig: jax.Array, max_probes: int = 0) -> jax.Array:
+    """Shrivastava (ICML 2017) optimal densification.
+
+    Each empty bin j copies the value of the first NON-empty bin in its
+    own probe sequence ``_optimal_probe(j, t)`` for t = 0, 1, ... --
+    i.i.d. donor choices instead of the rotation scheme's shared
+    nearest-right donor, which is what removes the correlated-borrow
+    variance.  Rows that are entirely empty stay all-EMPTY.  Probing is a
+    bounded ``while_loop`` (it exits as soon as every empty bin found a
+    donor); the deterministic fallback after ``max_probes`` attempts --
+    the row's first non-empty bin -- keeps the function total and
+    identical between the reference and kernel epilogues.
+    """
+    n, k = sig.shape
+    if max_probes <= 0:
+        max_probes = 8 * k + 64
+    nonempty = sig != EMPTY
+    any_ne = jnp.any(nonempty, axis=1, keepdims=True)
+    j = jnp.arange(k, dtype=jnp.int32)
+
+    def cond(state):
+        t, _, resolved = state
+        return (t < max_probes) & ~jnp.all(resolved)
+
+    def body(state):
+        t, out, resolved = state
+        donor = _optimal_probe(j, t, k)                            # (k,)
+        donor_val = jnp.take(sig, donor, axis=1)                   # (n, k)
+        donor_ok = jnp.take(nonempty, donor, axis=1)
+        newly = ~resolved & donor_ok
+        return t + 1, jnp.where(newly, donor_val, out), resolved | donor_ok
+
+    init = (jnp.zeros((), jnp.int32), sig, nonempty | ~any_ne)
+    _, out, resolved = jax.lax.while_loop(cond, body, init)
+    # pathological unresolved bins: deterministic first-non-empty fallback
+    cand = jnp.where(nonempty, j[None, :], jnp.int32(2 * k))
+    first = jnp.min(cand, axis=1, keepdims=True)
+    fallback = jnp.take_along_axis(sig, first % k, axis=1)
+    return jnp.where(resolved, out, jnp.broadcast_to(fallback, out.shape))
 
 
 # ---------------------------------------------------------------------------

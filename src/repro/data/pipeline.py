@@ -258,19 +258,29 @@ class SignatureStream:
     The online-learning front half of the §3 pipeline with pluggable
     hashing scheme: ``family`` is a Hash2U/Hash4U (k-pass minwise
     hashing) or a ``repro.core.oph.OPH`` scheme (single-pass
-    one-permutation hashing).  Each yielded pair is the hashed chunk the
-    SGD loop consumes; ``stats`` aggregates load/kernel accounting like
-    ``preprocess_shards`` does for the batch path.
+    one-permutation hashing), executed through the
+    ``repro.kernels.SignatureEngine`` (``backend`` selects interpret /
+    compiled TPU / gpu-fallback execution).  With ``packed=True`` chunks
+    are ``PackedSignatures`` -- the k*b-bit wire format, packed inside
+    the kernel jit, so only packed words cross the host boundary.
+    ``stats`` aggregates load/kernel accounting like ``preprocess_shards``
+    does for the batch path.
     """
 
     def __init__(self, shard_paths: Sequence[str], family, *, b: int = 8,
                  chunk_size: int = 10_000, use_pallas: bool = True,
+                 backend: Optional[str] = None, packed: bool = False,
                  loader_kwargs: Optional[dict] = None):
+        from repro.kernels import SignatureEngine
         self.loader = ChunkedLoader(shard_paths, chunk_size=chunk_size,
                                     **(loader_kwargs or {}))
         self.family = family
         self.b = b
         self.use_pallas = use_pallas
+        self.packed = packed
+        self.engine = SignatureEngine(
+            family, b=b, packed=packed,
+            backend="ref" if not use_pallas else backend)
         self.kernel_seconds = 0.0
         self.examples = 0
 
@@ -282,17 +292,19 @@ class SignatureStream:
                 "bytes_read": self.loader.stats.bytes_read,
                 "source": "hash"}
 
-    def __iter__(self):
+    def hash_chunk(self, chunk: SparseBatch):
+        """Hash one SparseBatch chunk (with kernel-time accounting)."""
         import jax
-        from repro.kernels import batch_signatures
+        t0 = time.perf_counter()
+        sig = self.engine(chunk)
+        jax.block_until_ready(sig.data if self.packed else sig)
+        self.kernel_seconds += time.perf_counter() - t0
+        self.examples += chunk.n
+        return sig, chunk.labels
+
+    def __iter__(self):
         for chunk in self.loader:
-            t0 = time.perf_counter()
-            sig = batch_signatures(chunk, self.family, b=self.b,
-                                   use_pallas=self.use_pallas)
-            jax.block_until_ready(sig)
-            self.kernel_seconds += time.perf_counter() - t0
-            self.examples += chunk.n
-            yield sig, chunk.labels
+            yield self.hash_chunk(chunk)
 
 
 def batch_to_shards(batch: SparseBatch, out_dir: str, n_shards: int = 4,

@@ -1,11 +1,14 @@
-"""Distributed preprocessing driver: raw shards -> b-bit signature shards.
+"""Distributed preprocessing driver: raw shards -> packed ``.sig`` shards.
 
 This is the paper's §3 production pipeline as a service: stream raw sparse
-shards through the Pallas minhash kernel in chunks, write packed b-bit
-signature shards, and account the three phases (load / kernel / store)
-exactly as Figures 1-3 split them.  Multiple workers own disjoint shard
-slices (the ChunkedLoader's straggler machinery applies); on a TPU host
-the kernel phase runs on-device, here in interpret mode.
+shards through the signature engine in chunks, write bit-packed ``.sig``
+signature shards (k*b bits per example -- the Table-2/§6 wire accounting,
+sentinel OPH included via (b+1)-bit codes), and account the three phases
+(load / kernel / store) exactly as Figures 1-3 split them.  Multiple
+workers own disjoint shard slices (the ChunkedLoader's straggler
+machinery applies); the ``backend`` argument picks execution through the
+``repro.kernels.SignatureEngine`` registry (compiled on TPU, interpret on
+CPU hosts, jnp fallback on GPU until the triton lowering lands).
 """
 
 from __future__ import annotations
@@ -13,16 +16,16 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core.bbit import pack_signatures
 from repro.core.hashing import Hash2U, Hash4U
 from repro.core.oph import OPH
 from repro.data.pipeline import ChunkedLoader
-from repro.kernels import batch_signatures
+from repro.data.sigshard import read_sig_shard, write_sig_shard
+from repro.kernels import SignatureEngine
 
 
 @dataclasses.dataclass
@@ -40,7 +43,7 @@ class PreprocessStats:
 
 def preprocess_shards(shard_paths: Sequence[str], out_dir: str, family, *,
                       b: int = 8, chunk_size: int = 10_000,
-                      n_workers: int = 1,
+                      n_workers: int = 1, backend: Optional[str] = None,
                       loader_kwargs: Optional[dict] = None
                       ) -> PreprocessStats:
     """Run the full preprocessing pipeline; returns phase accounting.
@@ -48,22 +51,18 @@ def preprocess_shards(shard_paths: Sequence[str], out_dir: str, family, *,
     family: Hash2U / Hash4U (k-pass minwise hashing) or an ``OPH`` scheme
     over a 2U/4U base (single-pass one-permutation hashing, ~k x fewer
     hash evaluations).  The permutation path is deliberately not offered
-    here -- the paper's Issue 3: no permutation matrices at scale.  OPH
-    must use ``densify="rotation"``: sentinel-coded empty bins cannot be
-    bit-packed without aliasing a genuine b-bit value.  (Under rotation,
-    empty input *sets* fold to the all-ones b-bit code -- the same
-    defined value the minhash path assigns them -- so packing is always
-    well-defined.)
+    here -- the paper's Issue 3: no permutation matrices at scale.  All
+    densification modes pack: rotation/optimal signatures pack as b-bit
+    codes; sentinel signatures pack as (b+1)-bit codes with EMPTY stored
+    as 2^b, so even the estimator-facing sentinel scheme ships the
+    paper's per-example bit budget.
     """
     if isinstance(family, OPH):
         if not isinstance(family.base, (Hash2U, Hash4U)):
             raise TypeError("production OPH preprocessing uses 2U/4U bases")
-        if family.densify != "rotation":
-            raise ValueError(
-                "preprocess_shards needs densify='rotation' (sentinel-coded "
-                "signatures cannot be b-bit packed unambiguously)")
     elif not isinstance(family, (Hash2U, Hash4U)):
         raise TypeError("production preprocessing uses 2U/4U/OPH families")
+    engine = SignatureEngine(family, b=b, packed=True, backend=backend)
     os.makedirs(out_dir, exist_ok=True)
     stats = PreprocessStats()
     loader = ChunkedLoader(shard_paths, chunk_size=chunk_size,
@@ -75,18 +74,17 @@ def preprocess_shards(shard_paths: Sequence[str], out_dir: str, family, *,
         stats.examples += chunk.n
         stats.bytes_in += chunk.nbytes()
 
-        sig = batch_signatures(chunk, family, b=b)       # Pallas kernel
-        packed = pack_signatures(sig, b)
-        jax.block_until_ready(packed)
+        packed = engine.packed_signatures(chunk)     # packed on device
+        jax.block_until_ready(packed.data)
         t_kernel = time.perf_counter()
         stats.kernel_s += t_kernel - t_loaded
 
-        out_path = os.path.join(out_dir, f"sig_{idx:05d}.npz")
-        host = np.asarray(packed)
-        np.savez(out_path, packed=host,
-                 labels=np.asarray(chunk.labels)
-                 if chunk.labels is not None else np.zeros((chunk.n,)),
-                 k=np.int32(family.k), b=np.int32(b))
+        out_path = os.path.join(out_dir, f"sig_{idx:05d}.sig")
+        labels = (np.asarray(chunk.labels) if chunk.labels is not None
+                  else np.zeros((chunk.n,), np.float32))
+        write_sig_shard(out_path, np.asarray(packed.data), labels,
+                        k=packed.k, b=packed.b, code_bits=packed.code_bits,
+                        sentinel=packed.sentinel)
         stats.bytes_out += os.path.getsize(out_path)
         t_mark = time.perf_counter()
         stats.store_s += t_mark - t_kernel
@@ -94,7 +92,21 @@ def preprocess_shards(shard_paths: Sequence[str], out_dir: str, family, *,
 
 
 def read_signature_shard(path: str):
-    """Load a signature shard back: (packed uint32 (n, words), labels,
-    k, b)."""
-    with np.load(path) as z:
-        return z["packed"], z["labels"], int(z["k"]), int(z["b"])
+    """Load a ``.sig`` shard back: (packed uint32 (n, words), labels, k, b).
+
+    Kept for compatibility with the old npz reader's 4-tuple, whose
+    documented pairing is ``unpack_signatures(words, b, k)`` -- that is
+    only correct for plain b-bit layouts, so this reader refuses
+    sentinel/(b+1)-bit shards instead of silently returning words a
+    legacy caller would misdecode.  Use
+    ``repro.data.sigshard.read_sig_shard`` for full metadata and any
+    layout.
+    """
+    words, labels, meta = read_sig_shard(path)
+    if meta.sentinel or meta.code_bits != meta.b:
+        raise ValueError(
+            f"{path}: {meta.code_bits}-bit"
+            f"{' sentinel' if meta.sentinel else ''} codes cannot be "
+            "decoded through the legacy (words, labels, k, b) contract; "
+            "use repro.data.sigshard.read_sig_shard")
+    return words, labels, meta.k, meta.b

@@ -2,18 +2,35 @@
 
   minhash.py  -- 2U / 4U minwise-hash signature kernels (the §3 GPU kernel,
                  re-derived for TPU: VMEM tiling, VPU lanes over hash
-                 functions, running-min accumulation, in-kernel BitMod).
+                 functions, running-min accumulation, in-kernel BitMod,
+                 fused b-bit extraction + word packing in the final step).
   oph.py      -- One Permutation Hashing kernels: the same running-min
                  reduction, but ONE hash evaluation per nonzero feeds all
-                 k bins (k x less hash work than minhash.py).
+                 k bins (k x less hash work than minhash.py); fused
+                 (b+1)-bit sentinel coding for the packed wire format.
   sigbag.py   -- Eq.(5) signature embedding-bag as one-hot MXU matmuls.
-  ops.py      -- jitted public wrappers (padding, block choice, dispatch,
-                 OPH densification epilogue).
+  pack.py     -- the packed b-bit wire format (PackSpec, device pack /
+                 unpack epilogues, in-kernel pack_block).
+  engine.py   -- SignaturePlan / SignatureEngine: backend registry
+                 (interpret / tpu / gpu / ref), JSON block-size tuning
+                 table, padding/tiling, scheme dispatch, PackedSignatures.
+  ops.py      -- legacy re-exports of the public wrappers.
   ref.py      -- pure-jnp oracles for allclose validation.
+
+Only this package calls ``*_pallas`` builders; everything downstream goes
+through the engine (or the legacy wrappers it backs).
 """
 
-from repro.kernels.ops import (batch_signatures, minhash2u, minhash4u,
-                               oph2u, oph4u, sigbag)
+from repro.kernels.engine import (BACKENDS, Backend, PackedSignatures,
+                                  SignatureEngine, SignaturePlan, TuningTable,
+                                  batch_signatures, default_tuning_table,
+                                  minhash2u, minhash4u, oph2u, oph4u,
+                                  register_backend, resolve_backend, sigbag)
+from repro.kernels.pack import PackSpec
 
-__all__ = ["batch_signatures", "minhash2u", "minhash4u", "oph2u", "oph4u",
-           "sigbag"]
+__all__ = [
+    "BACKENDS", "Backend", "PackSpec", "PackedSignatures", "SignatureEngine",
+    "SignaturePlan", "TuningTable", "batch_signatures",
+    "default_tuning_table", "minhash2u", "minhash4u", "oph2u", "oph4u",
+    "register_backend", "resolve_backend", "sigbag",
+]

@@ -28,7 +28,10 @@ output (n, k) block is revisited -- the standard Pallas reduction pattern
 Padding is communicated via per-row nonzero counts: lane t of row i is
 valid iff ``t < counts[i]``; invalid lanes hash to 0xFFFFFFFF so they never
 win the min.  If ``b > 0`` the lowest-b-bit extraction (the *b-bit* step)
-is fused into the final grid iteration.
+is fused into the final grid iteration; with ``pack=True`` that same final
+step additionally bit-packs the (BLK_N, BLK_K) b-bit tile into
+(BLK_N, BLK_K*b/32) uint32 words (``repro.kernels.pack.pack_block``), so
+signatures leave the kernel in the paper's k*b-bit wire format.
 """
 
 from __future__ import annotations
@@ -42,6 +45,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.hashing import add64, mod_mersenne31, umul32_wide
+from repro.kernels.pack import pack_block
 
 _U32 = jnp.uint32
 # numpy scalar (not a traced jax array) so kernels don't capture constants
@@ -52,8 +56,9 @@ _PAD = np.uint32(0xFFFFFFFF)
 # Kernel bodies
 # ---------------------------------------------------------------------------
 
-def _minhash2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref, *,
-                      s: int, b: int, blk_t: int, variant: str):
+def _minhash2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref,
+                      *packed_refs, s: int, b: int, blk_t: int, variant: str,
+                      pack: bool = False):
     t_step = pl.program_id(2)
     n_t = pl.num_programs(2)
 
@@ -82,11 +87,14 @@ def _minhash2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref, *,
     if b > 0:
         @pl.when(t_step == n_t - 1)
         def _extract_bbits():
-            out_ref[...] = out_ref[...] & _U32((1 << b) - 1)
+            z = out_ref[...] & _U32((1 << b) - 1)
+            out_ref[...] = z
+            if pack:
+                packed_refs[0][...] = pack_block(z, b)
 
 
-def _minhash4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *,
-                      s: int, b: int, blk_t: int):
+def _minhash4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *packed_refs,
+                      s: int, b: int, blk_t: int, pack: bool = False):
     t_step = pl.program_id(2)
     n_t = pl.num_programs(2)
 
@@ -116,7 +124,10 @@ def _minhash4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *,
     if b > 0:
         @pl.when(t_step == n_t - 1)
         def _extract_bbits():
-            out_ref[...] = out_ref[...] & _U32((1 << b) - 1)
+            z = out_ref[...] & _U32((1 << b) - 1)
+            out_ref[...] = z
+            if pack:
+                packed_refs[0][...] = pack_block(z, b)
 
 
 # ---------------------------------------------------------------------------
@@ -149,10 +160,25 @@ def _compiler_params(interpret: bool):
     return {}
 
 
+def _pack_out(n, k, b, blk_n, blk_k, out_spec, pack):
+    """(out_specs, out_shapes) with the optional packed-words output."""
+    out_specs = [out_spec]
+    out_shapes = [jax.ShapeDtypeStruct((n, k), jnp.uint32)]
+    if pack:
+        if b <= 0 or 32 % b or (blk_k * b) % 32:
+            raise ValueError(f"fused pack needs b | 32 and blk_k*b % 32 == 0, "
+                             f"got b={b}, blk_k={blk_k}")
+        out_specs.append(
+            pl.BlockSpec((blk_n, blk_k * b // 32), lambda i, j, t: (i, j)))
+        out_shapes.append(jax.ShapeDtypeStruct((n, k * b // 32), jnp.uint32))
+    return out_specs, out_shapes
+
+
 def minhash2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
                      a2: jax.Array, *, s: int, b: int = 0,
                      blk_n: int = 8, blk_t: int = 128, blk_k: int = 128,
-                     variant: str = "high", interpret: bool = True) -> jax.Array:
+                     variant: str = "high", pack: bool = False,
+                     interpret: bool = True):
     """2U minhash signatures: (n, nnz) indices -> (n, k) uint32 minima.
 
     Args:
@@ -161,41 +187,49 @@ def minhash2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
       a1, a2:  (k,) uint32 multiply-shift coefficients (a2 odd).
       s:       D = 2^s.
       b:       if > 0, fuse lowest-b-bit extraction into the last step.
+      pack:    also emit the bit-packed (n, k*b/32) words from the final
+               grid step; returns ``(sig, packed)``.
     """
     n, nnz = indices.shape
     k = a1.shape[0]
     grid, counts_spec, idx_spec, out_spec = _common_grid_specs(
         n, nnz, k, blk_n, blk_t, blk_k)
     coeff_spec = pl.BlockSpec((1, blk_k), lambda i, j, t: (0, j))
+    out_specs, out_shapes = _pack_out(n, k, b, blk_n, blk_k, out_spec, pack)
     kern = functools.partial(_minhash2u_kernel, s=s, b=b, blk_t=blk_t,
-                             variant=variant)
-    return pl.pallas_call(
+                             variant=variant, pack=pack)
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[counts_spec, idx_spec, coeff_spec, coeff_spec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((n, k), jnp.uint32),
+        out_specs=out_specs if pack else out_specs[0],
+        out_shape=out_shapes if pack else out_shapes[0],
         interpret=interpret,
         **_compiler_params(interpret),
     )(counts, indices, a1[None, :], a2[None, :])
+    return out
 
 
 def minhash4u_pallas(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
                      s: int, b: int = 0, blk_n: int = 8, blk_t: int = 128,
-                     blk_k: int = 128, interpret: bool = True) -> jax.Array:
+                     blk_k: int = 128, pack: bool = False,
+                     interpret: bool = True):
     """4U minhash signatures with in-kernel Mersenne BitMod (§3.4)."""
     n, nnz = indices.shape
     k = a.shape[1]
     grid, counts_spec, idx_spec, out_spec = _common_grid_specs(
         n, nnz, k, blk_n, blk_t, blk_k)
     coeff_spec = pl.BlockSpec((4, blk_k), lambda i, j, t: (0, j))
-    kern = functools.partial(_minhash4u_kernel, s=s, b=b, blk_t=blk_t)
-    return pl.pallas_call(
+    out_specs, out_shapes = _pack_out(n, k, b, blk_n, blk_k, out_spec, pack)
+    kern = functools.partial(_minhash4u_kernel, s=s, b=b, blk_t=blk_t,
+                             pack=pack)
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[counts_spec, idx_spec, coeff_spec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((n, k), jnp.uint32),
+        out_specs=out_specs if pack else out_specs[0],
+        out_shape=out_shapes if pack else out_shapes[0],
         interpret=interpret,
         **_compiler_params(interpret),
     )(counts, indices, a)
+    return out

@@ -15,8 +15,12 @@ paper's §3 preprocessing cost divided by k.
 
 Empty bins come out as the 0xFFFFFFFF sentinel; densification (and b-bit
 extraction, which must not destroy the sentinel before densification
-reads it) happens in the thin jnp epilogue in ``kernels/ops.py``, shared
-bit-for-bit with the ``core/oph.py`` reference.
+reads it) happens in the thin jnp epilogue in ``kernels/engine.py``,
+shared bit-for-bit with the ``core/oph.py`` reference.  For the packed
+*sentinel* wire format, ``code_b > 0`` moves that b-bit step into the
+kernel's final grid iteration: genuine minima are masked to b bits and
+EMPTY becomes the (b+1)-bit code 2^b (``repro.kernels.pack.PackSpec``),
+so the epilogue only has to bitstream-pack the codes.
 
 Paper mapping:
   * §3.2-§3.3 (the GPU chunk kernel, re-derived for TPU): grid layout,
@@ -65,9 +69,21 @@ def _binned_min(h, valid, out_ref, *, s: int, bin_bits: int, blk_k: int):
     out_ref[...] = jnp.minimum(out_ref[...], jnp.min(v, axis=1))
 
 
+def _sentinel_codes(out_ref, code_b: int):
+    """Final-step epilogue: b-bit values + EMPTY -> (b+1)-bit codes."""
+    t_step = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t_step == n_t - 1)
+    def _codes():
+        v = out_ref[...]
+        out_ref[...] = jnp.where(v == _EMPTY, _U32(1 << code_b),
+                                 v & _U32((1 << code_b) - 1))
+
+
 def _oph2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref, *,
                   s: int, bin_bits: int, blk_t: int, blk_k: int,
-                  variant: str):
+                  variant: str, code_b: int = 0):
     t_step = pl.program_id(2)
 
     @pl.when(t_step == 0)
@@ -89,10 +105,13 @@ def _oph2u_kernel(counts_ref, idx_ref, a1_ref, a2_ref, out_ref, *,
         else:
             h = h & _U32((1 << s) - 1)
     _binned_min(h, valid, out_ref, s=s, bin_bits=bin_bits, blk_k=blk_k)
+    if code_b > 0:
+        _sentinel_codes(out_ref, code_b)
 
 
 def _oph4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *,
-                  s: int, bin_bits: int, blk_t: int, blk_k: int):
+                  s: int, bin_bits: int, blk_t: int, blk_k: int,
+                  code_b: int = 0):
     t_step = pl.program_id(2)
 
     @pl.when(t_step == 0)
@@ -115,12 +134,15 @@ def _oph4u_kernel(counts_ref, idx_ref, a_ref, out_ref, *,
     if s < 31:
         acc = acc & _U32((1 << s) - 1)
     _binned_min(acc, valid, out_ref, s=s, bin_bits=bin_bits, blk_k=blk_k)
+    if code_b > 0:
+        _sentinel_codes(out_ref, code_b)
 
 
 def oph2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
                  a2: jax.Array, *, s: int, bin_bits: int,
                  blk_n: int = 8, blk_t: int = 128, blk_k: int = 128,
-                 variant: str = "high", interpret: bool = True) -> jax.Array:
+                 variant: str = "high", code_b: int = 0,
+                 interpret: bool = True) -> jax.Array:
     """2U OPH: (n, nnz) indices -> (n, k_lanes) sentinel-coded bin minima.
 
     Args:
@@ -130,6 +152,9 @@ def oph2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
       s:        D = 2^s.
       bin_bits: log2(number of real bins); lanes >= 2^bin_bits never match
                 and come out EMPTY (callers slice them off).
+      code_b:   if > 0, the final grid step emits (code_b+1)-bit sentinel
+                codes (EMPTY -> 2^code_b) instead of raw minima -- the
+                packed-wire-format epilogue fused into the kernel.
     """
     n, nnz = indices.shape
     k_lanes = blk_k * max(1, (1 << bin_bits) // blk_k)
@@ -137,7 +162,8 @@ def oph2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
         n, nnz, k_lanes, blk_n, blk_t, blk_k)
     coeff_spec = pl.BlockSpec((1, 1), lambda i, j, t: (0, 0))
     kern = functools.partial(_oph2u_kernel, s=s, bin_bits=bin_bits,
-                             blk_t=blk_t, blk_k=blk_k, variant=variant)
+                             blk_t=blk_t, blk_k=blk_k, variant=variant,
+                             code_b=code_b)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -151,7 +177,8 @@ def oph2u_pallas(indices: jax.Array, counts: jax.Array, a1: jax.Array,
 
 def oph4u_pallas(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
                  s: int, bin_bits: int, blk_n: int = 8, blk_t: int = 128,
-                 blk_k: int = 128, interpret: bool = True) -> jax.Array:
+                 blk_k: int = 128, code_b: int = 0,
+                 interpret: bool = True) -> jax.Array:
     """4U OPH with in-kernel Mersenne BitMod; a: (4, 1) uint32."""
     n, nnz = indices.shape
     k_lanes = blk_k * max(1, (1 << bin_bits) // blk_k)
@@ -159,7 +186,7 @@ def oph4u_pallas(indices: jax.Array, counts: jax.Array, a: jax.Array, *,
         n, nnz, k_lanes, blk_n, blk_t, blk_k)
     coeff_spec = pl.BlockSpec((4, 1), lambda i, j, t: (0, 0))
     kern = functools.partial(_oph4u_kernel, s=s, bin_bits=bin_bits,
-                             blk_t=blk_t, blk_k=blk_k)
+                             blk_t=blk_t, blk_k=blk_k, code_b=code_b)
     return pl.pallas_call(
         kern,
         grid=grid,

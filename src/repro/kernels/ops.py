@@ -1,226 +1,17 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Legacy public wrappers, re-exported from ``repro.kernels.engine``.
 
-These pad inputs up to tile boundaries, pick block shapes, dispatch to the
-Pallas kernel (interpret mode on CPU, compiled on TPU), and slice the
-result back.  Downstream code (preprocessing pipeline, recsys hashed
-frontends, benchmarks) calls these, never `pl.pallas_call` directly.
+Historically this module held the jitted padding/dispatch wrappers and an
+isinstance chain in ``batch_signatures``.  That machinery now lives in
+``repro.kernels.engine`` (``SignaturePlan`` / ``SignatureEngine``: one
+seam for backend choice, block-size tuning and the packed wire format);
+this module remains so existing imports keep working.  New code should
+import from ``repro.kernels`` or ``repro.kernels.engine`` directly.
 """
 
 from __future__ import annotations
 
-import functools
+from repro.kernels.engine import (batch_signatures, minhash2u, minhash4u,
+                                  oph2u, oph4u, sigbag)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.oph import EMPTY, OPH, densify_rotation
-from repro.data.sparse import SparseBatch
-from repro.kernels.minhash import minhash2u_pallas, minhash4u_pallas
-from repro.kernels.oph import oph2u_pallas, oph4u_pallas
-from repro.kernels.sigbag import sigbag_pallas
-from repro.kernels import ref as kref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_axis(x, mult, axis, value=0):
-    size = x.shape[axis]
-    target = ((size + mult - 1) // mult) * mult
-    if target == size:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, target - size)
-    return jnp.pad(x, pads, constant_values=value)
-
-
-@functools.partial(jax.jit, static_argnames=("s", "b", "variant", "use_pallas",
-                                             "blk_n", "blk_t", "blk_k"))
-def minhash2u(indices: jax.Array, counts: jax.Array, a1: jax.Array,
-              a2: jax.Array, *, s: int, b: int = 0, variant: str = "high",
-              use_pallas: bool = True, blk_n: int = 8, blk_t: int = 128,
-              blk_k: int = 128) -> jax.Array:
-    """Batched 2U minhash signatures. counts: (n,) or (n,1) int32."""
-    n, _ = indices.shape
-    k = a1.shape[0]
-    counts = counts.reshape(-1, 1).astype(jnp.int32)
-    if not use_pallas:
-        return kref.minhash2u_ref(indices, counts, a1, a2, s=s, b=b,
-                                  variant=variant)
-    idx = _pad_axis(_pad_axis(indices, blk_t, 1), blk_n, 0)
-    cts = _pad_axis(counts, blk_n, 0)
-    a1p = _pad_axis(a1, blk_k, 0)
-    a2p = _pad_axis(a2, blk_k, 0, value=1)
-    out = minhash2u_pallas(idx, cts, a1p, a2p, s=s, b=b, blk_n=blk_n,
-                           blk_t=blk_t, blk_k=blk_k, variant=variant,
-                           interpret=not _on_tpu())
-    return out[:n, :k]
-
-
-@functools.partial(jax.jit, static_argnames=("s", "b", "use_pallas", "blk_n",
-                                             "blk_t", "blk_k"))
-def minhash4u(indices: jax.Array, counts: jax.Array, a: jax.Array, *, s: int,
-              b: int = 0, use_pallas: bool = True, blk_n: int = 8,
-              blk_t: int = 128, blk_k: int = 128) -> jax.Array:
-    """Batched 4U minhash signatures (Mersenne BitMod path)."""
-    n, _ = indices.shape
-    k = a.shape[1]
-    counts = counts.reshape(-1, 1).astype(jnp.int32)
-    if not use_pallas:
-        return kref.minhash4u_ref(indices, counts, a, s=s, b=b)
-    idx = _pad_axis(_pad_axis(indices, blk_t, 1), blk_n, 0)
-    cts = _pad_axis(counts, blk_n, 0)
-    ap = _pad_axis(a, blk_k, 1, value=1)
-    out = minhash4u_pallas(idx, cts, ap, s=s, b=b, blk_n=blk_n, blk_t=blk_t,
-                           blk_k=blk_k, interpret=not _on_tpu())
-    return out[:n, :k]
-
-
-def _oph_lanes(k: int, blk_k: int) -> tuple[int, int]:
-    """(k_lanes, blk_k) for an OPH call: k padded to a full lane block."""
-    if k < 1 or k & (k - 1):
-        raise ValueError(f"OPH bin count k must be a power of two, got {k}")
-    k_lanes = max(k, 128)
-    if blk_k <= 0:
-        blk_k = min(k_lanes, 512)             # all bins in one pass for k<=512
-    return max(k_lanes, blk_k), blk_k
-
-
-def _oph_epilogue(raw: jax.Array, n: int, k: int, s: int, bin_bits: int,
-                  densify: str, b: int) -> jax.Array:
-    """Slice lane padding, densify, extract b bits.
-
-    Shared verbatim with the semantics of ``core.oph.oph_signatures`` so
-    the kernel path is bit-exact against the reference: sentinel keeps
-    EMPTY through the b-bit mask; rotation masks everything (its only
-    EMPTYs are all-empty rows, which fold to the all-ones code).
-    """
-    sig = raw[:n, :k]
-    if densify == "rotation":
-        sig = densify_rotation(sig, 1 << (s - bin_bits))
-    if b > 0:
-        mask_b = jnp.uint32((1 << b) - 1)
-        if densify == "rotation":
-            sig = sig & mask_b
-        else:
-            sig = jnp.where(sig != EMPTY, sig & mask_b, sig)
-    return sig
-
-
-@functools.partial(jax.jit, static_argnames=("s", "bin_bits", "variant",
-                                             "use_pallas", "k_lanes", "blk_n",
-                                             "blk_t", "blk_k"))
-def _oph2u_raw(indices, counts, a1, a2, *, s, bin_bits, variant, use_pallas,
-               k_lanes, blk_n, blk_t, blk_k):
-    if not use_pallas:
-        return kref.oph2u_ref(indices, counts, a1, a2, s=s, bin_bits=bin_bits,
-                              k_lanes=k_lanes, variant=variant)
-    idx = _pad_axis(_pad_axis(indices, blk_t, 1), blk_n, 0)
-    cts = _pad_axis(counts, blk_n, 0)
-    return oph2u_pallas(idx, cts, a1, a2, s=s, bin_bits=bin_bits, blk_n=blk_n,
-                        blk_t=blk_t, blk_k=blk_k, variant=variant,
-                        interpret=not _on_tpu())
-
-
-@functools.partial(jax.jit, static_argnames=("s", "bin_bits", "use_pallas",
-                                             "k_lanes", "blk_n", "blk_t",
-                                             "blk_k"))
-def _oph4u_raw(indices, counts, a, *, s, bin_bits, use_pallas, k_lanes,
-               blk_n, blk_t, blk_k):
-    if not use_pallas:
-        return kref.oph4u_ref(indices, counts, a, s=s, bin_bits=bin_bits,
-                              k_lanes=k_lanes)
-    idx = _pad_axis(_pad_axis(indices, blk_t, 1), blk_n, 0)
-    cts = _pad_axis(counts, blk_n, 0)
-    return oph4u_pallas(idx, cts, a, s=s, bin_bits=bin_bits, blk_n=blk_n,
-                        blk_t=blk_t, blk_k=blk_k, interpret=not _on_tpu())
-
-
-@functools.partial(jax.jit, static_argnames=("k", "s", "bin_bits", "densify",
-                                             "b"))
-def _oph_epilogue_jit(raw, *, k, s, bin_bits, densify, b):
-    n = raw.shape[0]
-    return _oph_epilogue(raw, n, k, s, bin_bits, densify, b)
-
-
-def oph2u(indices: jax.Array, counts: jax.Array, a1: jax.Array,
-          a2: jax.Array, *, s: int, k: int, densify: str = "rotation",
-          b: int = 0, variant: str = "high", use_pallas: bool = True,
-          blk_n: int = 8, blk_t: int = 128, blk_k: int = 0) -> jax.Array:
-    """Batched 2U OPH signatures: ONE hash pass -> (n, k) bin minima.
-
-    Two jit stages: the Pallas raw-bin stage is independent of
-    (densify, b), so sweeping those (tests, b-grids) reuses its compiled
-    executable and only the cheap epilogue recompiles.
-    """
-    n, _ = indices.shape
-    counts = counts.reshape(-1, 1).astype(jnp.int32)
-    bin_bits = k.bit_length() - 1
-    k_lanes, blk_k = _oph_lanes(k, blk_k)
-    raw = _oph2u_raw(indices, counts, a1, a2, s=s, bin_bits=bin_bits,
-                     variant=variant, use_pallas=use_pallas, k_lanes=k_lanes,
-                     blk_n=blk_n, blk_t=blk_t, blk_k=blk_k)
-    return _oph_epilogue_jit(raw, k=k, s=s, bin_bits=bin_bits,
-                             densify=densify, b=b)[:n]
-
-
-def oph4u(indices: jax.Array, counts: jax.Array, a: jax.Array, *, s: int,
-          k: int, densify: str = "rotation", b: int = 0,
-          use_pallas: bool = True, blk_n: int = 8, blk_t: int = 128,
-          blk_k: int = 0) -> jax.Array:
-    """Batched 4U OPH signatures (Mersenne BitMod path); see ``oph2u``."""
-    n, _ = indices.shape
-    counts = counts.reshape(-1, 1).astype(jnp.int32)
-    bin_bits = k.bit_length() - 1
-    k_lanes, blk_k = _oph_lanes(k, blk_k)
-    raw = _oph4u_raw(indices, counts, a, s=s, bin_bits=bin_bits,
-                     use_pallas=use_pallas, k_lanes=k_lanes, blk_n=blk_n,
-                     blk_t=blk_t, blk_k=blk_k)
-    return _oph_epilogue_jit(raw, k=k, s=s, bin_bits=bin_bits,
-                             densify=densify, b=b)[:n]
-
-
-@functools.partial(jax.jit, static_argnames=("use_pallas", "blk_n"))
-def sigbag(tokens: jax.Array, table: jax.Array, *, use_pallas: bool = True,
-           blk_n: int = 128) -> jax.Array:
-    """Signature embedding-bag: out[i] = sum_j table[j, tokens[i, j]]."""
-    if not use_pallas:
-        return kref.sigbag_ref(tokens, table)
-    n = tokens.shape[0]
-    tok = _pad_axis(tokens, blk_n, 0)
-    out = sigbag_pallas(tok, table, blk_n=blk_n, interpret=not _on_tpu())
-    return out[:n]
-
-
-def batch_signatures(batch: SparseBatch, family, *, b: int = 0,
-                     use_pallas: bool = True) -> jax.Array:
-    """Signatures for a SparseBatch.
-
-    ``family`` selects the scheme: a Hash2U/Hash4U family runs the k-pass
-    minwise kernels; an ``repro.core.oph.OPH`` scheme runs the
-    single-pass binned kernels (k x fewer hash evaluations).
-    """
-    from repro.core.hashing import Hash2U, Hash4U
-    counts = jnp.sum(batch.mask.astype(jnp.int32), axis=1)
-    if isinstance(family, OPH):
-        base = family.base
-        if isinstance(base, Hash2U):
-            return oph2u(batch.indices, counts, base.a1, base.a2,
-                         s=family.s, k=family.k, densify=family.densify,
-                         b=b, variant=base.variant, use_pallas=use_pallas)
-        if isinstance(base, Hash4U):
-            return oph4u(batch.indices, counts, base.a, s=family.s,
-                         k=family.k, densify=family.densify, b=b,
-                         use_pallas=use_pallas)
-        # permutation base: gold-standard jnp reference (tests/small D only)
-        from repro.core.oph import oph_signatures
-        return oph_signatures(batch.indices, batch.mask, family, b=b)
-    if isinstance(family, Hash2U):
-        return minhash2u(batch.indices, counts, family.a1, family.a2,
-                         s=family.s, b=b, variant=family.variant,
-                         use_pallas=use_pallas)
-    if isinstance(family, Hash4U):
-        return minhash4u(batch.indices, counts, family.a, s=family.s, b=b,
-                         use_pallas=use_pallas)
-    raise TypeError(f"Pallas path supports 2U/4U/OPH families, got {type(family)}")
+__all__ = ["batch_signatures", "minhash2u", "minhash4u", "oph2u", "oph4u",
+           "sigbag"]

@@ -8,7 +8,13 @@ The paper's learning layer (§1.2, §5, §6):
     pass is the signature embedding-bag ``sum_j w[j * 2^b + z_j]``
     (``repro.kernels.sigbag`` with d = 1), never materializing one-hots,
   * also usable on dense features (VW-hashed vectors, original data) for
-    the paper's baselines.
+    the paper's baselines,
+  * and directly on the *packed* wire format (``feature_kind="packed"``):
+    mini-batches arrive as (n, words) uint32 -- k*b bits per example, the
+    §6/Table-2 budget -- and the bitstream unpack happens *inside* the
+    jitted margin/gradient, so the packed words are all that ever moves.
+    Sentinel OPH codes (value 2^b) come out of the unpack as invalid
+    tokens and are zero-coded like EMPTY.
 
 Paper mapping:
   * Eq. (5): ``hashed_margin`` / the implicit expansion via
@@ -34,7 +40,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.bbit import expand_tokens
+from repro.core.bbit import expand_tokens, unpack_codes
 
 
 @jax.tree_util.register_dataclass
@@ -46,6 +52,26 @@ class LinearModel:
     @staticmethod
     def create(dim: int, dtype=jnp.float32) -> "LinearModel":
         return LinearModel(w=jnp.zeros((dim,), dtype), bias=jnp.zeros((), dtype))
+
+
+def packed_to_values(packed: jax.Array, *, k: int, b: int,
+                     sentinel: bool = False) -> jax.Array:
+    """Wire-format words -> (n, k) signature values, traced inside jit.
+
+    Sentinel schemes carry (b+1)-bit codes; the EMPTY code 2^b is already
+    >= 2^b, so ``_valid_tokens`` zero-codes it with no extra mapping.
+    """
+    return unpack_codes(packed, b + 1 if sentinel else b, k)
+
+
+def _as_hashed(feats: jax.Array, feature_kind: str, b: int,
+               k: Optional[int], sentinel: bool):
+    """Normalize 'packed' features to b-bit values; pass 'hashed' through."""
+    if feature_kind != "packed":
+        return feats, feature_kind
+    if k is None:
+        raise ValueError("feature_kind='packed' needs k= (signature length)")
+    return packed_to_values(feats, k=k, b=b, sentinel=sentinel), "hashed"
 
 
 def _valid_tokens(sig_b: jax.Array, b: int) -> tuple[jax.Array, jax.Array]:
@@ -85,13 +111,15 @@ def logistic_objective(margins: jax.Array, y: jax.Array, w: jax.Array,
     return 0.5 * jnp.sum(w * w) + C * jnp.sum(jax.nn.softplus(-y * margins))
 
 
-def make_loss_fn(kind: str, feature_kind: str, b: int, C: float
+def make_loss_fn(kind: str, feature_kind: str, b: int, C: float, *,
+                 k: Optional[int] = None, sentinel: bool = False
                  ) -> Callable[[LinearModel, jax.Array, jax.Array], jax.Array]:
-    """Loss(model, features, y). feature_kind: 'hashed' | 'dense'."""
+    """Loss(model, features, y). feature_kind: 'hashed'|'packed'|'dense'."""
     obj = svm_objective if kind == "svm" else logistic_objective
 
     def loss(model: LinearModel, feats: jax.Array, y: jax.Array) -> jax.Array:
-        m = (hashed_margin(model, feats, b) if feature_kind == "hashed"
+        feats, fkind = _as_hashed(feats, feature_kind, b, k, sentinel)
+        m = (hashed_margin(model, feats, b) if fkind == "hashed"
              else dense_margin(model, feats))
         # normalize the data term by batch size so C matches the paper's
         # per-example weighting under mini-batching
@@ -102,8 +130,10 @@ def make_loss_fn(kind: str, feature_kind: str, b: int, C: float
 
 
 def accuracy(model: LinearModel, feats: jax.Array, y: jax.Array, *,
-             feature_kind: str, b: int = 0) -> jax.Array:
-    m = (hashed_margin(model, feats, b) if feature_kind == "hashed"
+             feature_kind: str, b: int = 0, k: Optional[int] = None,
+             sentinel: bool = False) -> jax.Array:
+    feats, fkind = _as_hashed(feats, feature_kind, b, k, sentinel)
+    m = (hashed_margin(model, feats, b) if fkind == "hashed"
          else dense_margin(model, feats))
     return jnp.mean((jnp.sign(m) == y).astype(jnp.float32))
 
@@ -130,14 +160,18 @@ def sgd_svm_init(dim: int, avg_start: float = 0.0) -> SGDState:
 
 def sgd_svm_step(state: SGDState, feats: jax.Array, y: jax.Array, *,
                  lam: float, eta0: float, b: int, feature_kind: str = "hashed",
-                 kind: str = "svm", average: bool = False) -> SGDState:
+                 kind: str = "svm", average: bool = False,
+                 k: Optional[int] = None, sentinel: bool = False) -> SGDState:
     """One mini-batch SGD update with Bottou's 1/(1 + lam*eta0*t) schedule.
 
     Implements Eq. (12): w <- w - eta_t * (lam w - [margin violators] y x),
     with the per-example gradient averaged over the mini-batch (batch size 1
     reproduces the paper exactly).  ``average=True`` maintains the ASGD
     (Wei Xu / Bottou averaged-SGD, §6.3) iterate average.
+    ``feature_kind="packed"`` takes the k*b-bit wire words and unpacks
+    them here, inside the jitted step (``k=`` required).
     """
+    feats, feature_kind = _as_hashed(feats, feature_kind, b, k, sentinel)
     model = state.model
     eta = eta0 / (1.0 + lam * eta0 * state.t)
 

@@ -5,24 +5,28 @@ The paper's online-learning argument is about *per-epoch data cost*:
 SGD/ASGD needs 10-100 passes, the data does not fit in memory, so every
 epoch pays the loading bill -- and b-bit hashing shrinks that bill by the
 Table-2/§6 storage reduction.  This module makes the repo's training
-entry points actually live that loop instead of round-tripping signatures
-through ad-hoc ``.npz`` files:
+entry points actually live that loop on the packed wire format:
 
   * ``SignatureCache`` -- wraps a ``SignatureStream``.  Epoch 0 streams
-    raw shards through the hash kernel (one pass, signatures go straight
-    to the SGD step on device) while writing b-bit-*packed* signature
-    shards to disk; it records original-vs-hashed bytes (the Table-2/§6
-    reduction).  Epochs >= 1 replay the packed shards with the same
-    prefetch + straggler/IO-retry machinery as ``ChunkedLoader``
-    (``read_with_retries`` / ``prefetch_iter`` are shared), unpacking the
-    b-bit words *on device* -- the host only ever moves k*b bits per
-    example.
+    raw shards through the signature engine (one pass, signatures go
+    straight to the SGD step on device) while writing bit-packed ``.sig``
+    shards (``repro.data.sigshard``: raw mmap-able header + payload,
+    k*b bits per example -- (b+1)-bit codes for sentinel OPH); it records
+    original-vs-hashed bytes (the Table-2/§6 reduction).  Epochs >= 1
+    replay the shards with the same prefetch + straggler/IO-retry
+    machinery as ``ChunkedLoader`` (``read_with_retries`` /
+    ``prefetch_iter`` are shared); packed words go to the device as-is
+    and are unpacked *inside the jitted SGD step* -- the host only ever
+    moves k*b bits per example.  ``max_cache_bytes`` bounds the on-disk
+    footprint (chunks past the budget are re-hashed on replay), and
+    ``close()`` / context-manager use cleans up owned temp cache dirs
+    (they used to leak one per run).
   * ``OnlineTrainer`` -- consumes a ``SignatureStream`` or a
     ``SignatureCache`` (anything yielding ``(signatures, labels)``
-    chunks), runs the Bottou SGD / ASGD / logistic-regression update with
-    a donated state buffer, and accounts an ``EpochStats`` per epoch
-    (load / kernel / train seconds, bytes, examples) -- the quantities
-    behind Figures 13-16/19 and Table 4.
+    chunks, packed or not), runs the Bottou SGD / ASGD / logistic
+    update with a donated state buffer, and accounts an ``EpochStats``
+    per epoch (load / kernel / train seconds, bytes, examples) -- the
+    quantities behind Figures 13-16/19 and Table 4.
   * ``make_family`` -- one switch over the paper's hashing schemes:
     ``"2u"`` / ``"4u"`` (k-pass minwise) and ``"oph"`` / ``"oph-4u"``
     (single-pass one-permutation hashing, x ``densify=``).
@@ -41,19 +45,23 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import shutil
 import tempfile
 import time
+import weakref
 from typing import Callable, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bbit import pack_signatures, unpack_signatures
 from repro.core.hashing import Hash2U, Hash4U
-from repro.core.oph import EMPTY, OPH
+from repro.core.oph import OPH
 from repro.data.pipeline import (LoaderStats, SignatureStream, prefetch_iter,
                                  read_with_retries)
+from repro.data.sigshard import read_sig_shard, write_sig_shard
+from repro.kernels import PackedSignatures
+from repro.kernels.pack import PackSpec, pack_device, unpack_device
 from repro.models.linear import (accuracy, asgd_model, sgd_svm_init,
                                  sgd_svm_step)
 
@@ -66,8 +74,10 @@ def make_family(key: jax.Array, scheme: str, k: int, s: int, *,
     (k hash evaluations per nonzero); ``"oph"`` (2U base) / ``"oph-4u"``
     are single-pass one-permutation hashing (ONE evaluation per nonzero,
     k bins).  ``densify`` applies to the OPH schemes only: ``"rotation"``
-    (Shrivastava-Li, signatures behave like minhash) or ``"sentinel"``
-    (empty bins stay EMPTY; the learning layer zero-codes them).
+    (Shrivastava-Li 2014, signatures behave like minhash), ``"optimal"``
+    (Shrivastava 2017 probe-sequence densification, lower estimator
+    variance) or ``"sentinel"`` (empty bins stay EMPTY; the learning
+    layer zero-codes them).
     """
     if scheme == "2u":
         return Hash2U.create(key, k, s, variant=variant)
@@ -83,7 +93,7 @@ def make_family(key: jax.Array, scheme: str, k: int, s: int, *,
 
 
 # ---------------------------------------------------------------------------
-# SignatureCache: hash once, replay b-bit-packed shards every later epoch
+# SignatureCache: hash once, replay packed .sig shards every later epoch
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -92,7 +102,9 @@ class CacheStats:
 
     bytes_original: int = 0      # raw shard bytes read to build the cache
     bytes_cached: int = 0        # packed signature shard bytes written
+    bytes_payload: int = 0       # signature payload only (k*b-bit budget)
     shards: int = 0
+    uncached_chunks: int = 0     # chunks past max_cache_bytes (re-hashed)
     examples: int = 0
     write_s: float = 0.0
 
@@ -101,40 +113,68 @@ class CacheStats:
         return self.bytes_original / max(self.bytes_cached, 1)
 
 
+def _wire_spec(b: int, sentinel: bool) -> Tuple[int, bool]:
+    """(code_bits, sentinel_flag) for storing b-bit signatures on disk.
+
+    1 <= b <= 16 stores the bitstream wire format ((b+1)-bit codes for
+    sentinel schemes); anything else falls back to raw 32-bit lanes,
+    which also carry the EMPTY marker verbatim.
+    """
+    if 1 <= b <= 16:
+        return (b + 1, True) if sentinel else (b, False)
+    return 32, False
+
+
 class SignatureCache:
-    """Hash on epoch 0, replay b-bit-packed signature shards afterwards.
+    """Hash on epoch 0, replay packed ``.sig`` signature shards afterwards.
 
     Iterating yields ``(signatures, labels)`` chunks exactly like the
-    wrapped ``SignatureStream``; the first full pass additionally writes
-    each chunk as a packed shard under ``cache_dir`` (bit-exact: replayed
-    signatures equal the fresh stream's output).  Replay uses the same
-    prefetch and straggler/IO-retry machinery as ``ChunkedLoader``
-    (``replay_stats`` is a ``LoaderStats``), and unpacks the b-bit words
-    on device so host->device traffic is k*b bits per example.
+    wrapped ``SignatureStream`` (packed streams yield
+    ``PackedSignatures``); the first full pass additionally writes each
+    chunk as a bit-packed ``.sig`` shard under ``cache_dir`` (bit-exact:
+    replayed signatures equal the fresh stream's output).  Replay uses
+    the same prefetch and straggler/IO-retry machinery as
+    ``ChunkedLoader`` (``replay_stats`` is a ``LoaderStats``), memory-maps
+    the payload, and defers unpacking to the device (packed streams: to
+    the jitted SGD step itself), so the host only moves k*b bits per
+    example.
 
-    Packing: b-bit values pack into uint32 words when ``b | 32``.
-    Sentinel-densified OPH signatures carry the EMPTY marker, which is
-    stored as the value ``2^b`` in the smallest integer dtype that fits
-    (no uint32 packing) and restored to EMPTY on replay.
+    Lifecycle: ``max_cache_bytes`` caps the shard footprint -- chunks
+    past the budget are not written and get re-hashed during replay
+    (``stats.uncached_chunks``; a budget-truncated cache re-reads the
+    raw shards on replay because chunk boundaries cut across them, so
+    size the budget to fit the full cache when replay I/O matters).  ``close()`` (or context-manager exit)
+    deletes the shards, and removes the cache dir entirely when this
+    cache created it (``tempfile.mkdtemp``); a ``weakref.finalize``
+    backstop covers caches that are garbage-collected unclosed, so temp
+    dirs no longer leak one per run.
     """
 
     def __init__(self, stream: SignatureStream, cache_dir: Optional[str] = None,
                  *, prefetch: int = 2, straggler_deadline_s: float = 30.0,
-                 max_retries: int = 2):
+                 max_retries: int = 2, max_cache_bytes: Optional[int] = None):
         self.stream = stream
         self.b = stream.b
         fam = stream.family
+        self.k = fam.k
         self.sentinel = isinstance(fam, OPH) and fam.densify == "sentinel"
-        self.pack = (not self.sentinel) and 0 < self.b and 32 % self.b == 0
+        self.packed = stream.packed
+        self._owns_dir = cache_dir is None
         self.cache_dir = cache_dir or tempfile.mkdtemp(prefix="repro_sigcache_")
         os.makedirs(self.cache_dir, exist_ok=True)
         self.prefetch = prefetch
         self.deadline = straggler_deadline_s
         self.max_retries = max_retries
+        self.max_cache_bytes = max_cache_bytes
         self.populated = False
+        self.closed = False
         self.paths: List[str] = []
         self.stats = CacheStats()
         self.replay_stats = LoaderStats()
+        self._finalizer = (weakref.finalize(self, shutil.rmtree,
+                                            self.cache_dir,
+                                            ignore_errors=True)
+                           if self._owns_dir else None)
 
     # -- stats protocol (read by OnlineTrainer as per-epoch deltas) -----
     @property
@@ -145,43 +185,86 @@ class SignatureCache:
                 "source": "cache" if self.populated else "hash"}
 
     def __iter__(self):
+        if self.closed:
+            raise RuntimeError("SignatureCache is closed")
         if self.populated:
             yield from self._replay()
         else:
             yield from self._populate()
 
+    # -- lifecycle ------------------------------------------------------
+    def evict(self) -> None:
+        """Drop all cached shards; the next pass hashes and re-populates."""
+        for path in self.paths:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+        self.paths = []
+        self.populated = False
+        self.stats = CacheStats()
+
+    def close(self) -> None:
+        """Evict shards and delete the cache dir if this cache owns it."""
+        if self.closed:
+            return
+        self.evict()
+        if self._owns_dir:
+            shutil.rmtree(self.cache_dir, ignore_errors=True)
+            if self._finalizer is not None:
+                self._finalizer.detach()
+        self.closed = True
+
+    def __enter__(self) -> "SignatureCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- epoch 0: hash + write-through ---------------------------------
-    def _encode(self, sig: jax.Array) -> Tuple[np.ndarray, bool]:
-        """Device signatures -> host array for storage; returns (data, packed)."""
-        if self.pack:
-            return np.asarray(pack_signatures(sig, self.b)), True
-        host = np.asarray(sig).astype(np.uint32)
-        span = (1 << self.b) + 1 if self.b > 0 else 1 << 32  # values + EMPTY code
-        if self.sentinel and self.b > 0:
-            host = np.where(host == np.uint32(EMPTY),
-                            np.uint32(1 << self.b), host)
-        dtype = (np.uint8 if span <= 1 << 8 else
-                 np.uint16 if span <= 1 << 16 else np.uint32)
-        return host.astype(dtype), False
+    def _encode(self, sig) -> np.ndarray:
+        """Device signatures -> host packed words for storage."""
+        if isinstance(sig, PackedSignatures):
+            return np.asarray(sig.data)
+        if _wire_spec(self.b, self.sentinel)[0] == 32:
+            return np.asarray(sig).astype(np.uint32)
+        spec = PackSpec(self.k, self.b, self.sentinel)
+        return np.asarray(pack_device(sig, spec))
+
+    @property
+    def code_bits(self) -> int:
+        """Bits per stored signature value ((b+1) for sentinel wires).
+
+        Packed streams always satisfy 1 <= b <= 16 (engine-enforced), so
+        ``_wire_spec`` is THE definition for both stream kinds.
+        """
+        return _wire_spec(self.b, self.sentinel)[0]
 
     def _populate(self):
         # a partially-consumed epoch-0 pass may have written some shards
         # and read some raw bytes already; restart the accounting so
         # replay never sees duplicates and the reduction stays honest
-        self.paths = []
-        self.stats = CacheStats()
+        self.evict()
         raw_bytes_before = self.stream.loader.stats.bytes_read
+        budget = self.max_cache_bytes
         for i, (sig, labels) in enumerate(self.stream):
+            if budget is not None and self.stats.bytes_cached >= budget:
+                self.stats.uncached_chunks += 1
+                self.stats.examples += len(sig)
+                yield sig, labels
+                continue
             t0 = time.perf_counter()
-            data, packed = self._encode(sig)
-            path = os.path.join(self.cache_dir, f"sig_{i:05d}.npz")
-            np.savez(path, data=data, labels=np.asarray(labels),
-                     k=np.int32(sig.shape[1]), b=np.int32(self.b),
-                     packed=packed, sentinel=self.sentinel)
+            data = self._encode(sig)
+            code_bits = self.code_bits
+            path = os.path.join(self.cache_dir, f"sig_{i:05d}.sig")
+            meta = write_sig_shard(path, data, np.asarray(labels), k=self.k,
+                                   b=self.b, code_bits=code_bits,
+                                   sentinel=self.sentinel and code_bits != 32)
             self.paths.append(path)
             self.stats.bytes_cached += os.path.getsize(path)
+            self.stats.bytes_payload += meta.payload_bytes
             self.stats.shards += 1
-            self.stats.examples += sig.shape[0]
+            self.stats.examples += len(sig)
             self.stats.write_s += time.perf_counter() - t0
             yield sig, labels
         self.stats.bytes_original = (self.stream.loader.stats.bytes_read
@@ -190,20 +273,19 @@ class SignatureCache:
 
     # -- epochs >= 1: replay packed shards -----------------------------
     @staticmethod
-    def _read_host(path: str) -> dict:
-        with np.load(path) as z:
-            return {k: z[k] for k in z.files}
+    def _read_host(path: str):
+        return read_sig_shard(path, mmap=True)
 
-    def _decode(self, payload: dict) -> Tuple[jax.Array, jax.Array]:
-        k, b = int(payload["k"]), int(payload["b"])
-        data = jnp.asarray(payload["data"])          # packed words on device
-        if bool(payload["packed"]):
-            sig = unpack_signatures(data, b, k)
-        else:
-            sig = data.astype(jnp.uint32)
-            if bool(payload["sentinel"]) and b > 0:
-                sig = jnp.where(sig == jnp.uint32(1 << b), EMPTY, sig)
-        return sig, jnp.asarray(payload["labels"])
+    def _decode(self, payload) -> Tuple[object, jax.Array]:
+        words, labels, meta = payload
+        data = jnp.asarray(np.ascontiguousarray(words))  # packed words -> device
+        labels = jnp.asarray(labels)
+        if self.packed:
+            return PackedSignatures(data, meta.k, meta.b, meta.sentinel), labels
+        if meta.code_bits == 32:
+            return data, labels                          # raw uint32 lanes
+        spec = PackSpec(meta.k, meta.b, meta.sentinel)
+        return unpack_device(data, spec), labels         # unpack ON DEVICE
 
     def _replay(self):
         def chunks():
@@ -214,6 +296,18 @@ class SignatureCache:
                                         max_retries=self.max_retries)
         for payload in prefetch_iter(chunks, self.prefetch):
             yield self._decode(payload)
+        if self.stats.uncached_chunks:
+            # budget-evicted tail: re-hash the chunks past the cached
+            # prefix.  Chunk boundaries cut across raw shards, so the
+            # loader re-reads AND re-parses the whole raw set each
+            # replay epoch (bytes_read reflects that); only the tail
+            # pays the hash kernel.  Starting the read at the first
+            # uncached chunk's shard offset is a tracked follow-up
+            # (ROADMAP) -- size max_cache_bytes to fit the full cache
+            # when replay I/O dominates.
+            for i, chunk in enumerate(self.stream.loader):
+                if i >= len(self.paths):
+                    yield self.stream.hash_chunk(chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -246,11 +340,16 @@ class OnlineTrainer:
     ``SignatureStream`` (hash every epoch) or a ``SignatureCache`` (hash
     once, replay packed shards) -- and runs the Bottou update
     (Eq. 11-12) mini-batch by mini-batch with the SGD state donated to
-    the jitted step, so the weights never leave the device.
+    the jitted step, so the weights never leave the device.  Sources may
+    yield unpacked (n, k) signatures or ``PackedSignatures`` wire words;
+    packed chunks are fed to the step as words and unpacked *inside* the
+    jitted update (``repro.models.linear`` ``feature_kind="packed"``).
 
     ``kind``: ``"svm"`` (Eq. 6 hinge) or ``"logistic"`` (Eq. 7);
     ``average=True`` maintains the §6.3 ASGD iterate average and makes
-    ``model``/``evaluate`` use it.
+    ``model``/``evaluate`` use it.  ``close()`` closes every closeable
+    source this trainer consumed (e.g. owned ``SignatureCache`` temp
+    dirs).
     """
 
     k: int
@@ -267,21 +366,54 @@ class OnlineTrainer:
         if self.kind not in ("svm", "logistic"):
             raise ValueError(f"kind must be 'svm' or 'logistic', got {self.kind!r}")
         self.dim = self.k * (1 << self.b)
-        step = functools.partial(sgd_svm_step, lam=self.lam, eta0=self.eta0,
-                                 b=self.b, feature_kind="hashed",
-                                 kind=self.kind, average=self.average)
-        self._step = (jax.jit(step, donate_argnums=(0,)) if self.donate
-                      else jax.jit(step))
+        self._steps = {}
         self.state = sgd_svm_init(self.dim, avg_start=self.avg_start)
         self.epoch_stats: List[EpochStats] = []
+        self._sources: List[object] = []
+
+    def _get_step(self, feature_kind: str, sentinel: bool = False):
+        key = (feature_kind, sentinel)
+        if key not in self._steps:
+            step = functools.partial(
+                sgd_svm_step, lam=self.lam, eta0=self.eta0, b=self.b,
+                feature_kind=feature_kind, kind=self.kind,
+                average=self.average,
+                k=self.k if feature_kind == "packed" else None,
+                sentinel=sentinel)
+            self._steps[key] = (jax.jit(step, donate_argnums=(0,))
+                                if self.donate else jax.jit(step))
+        return self._steps[key]
 
     @property
     def model(self):
         return asgd_model(self.state) if self.average else self.state.model
 
-    def evaluate(self, sig_b: jax.Array, labels: jax.Array) -> float:
+    def evaluate(self, sig_b, labels: jax.Array) -> float:
+        if isinstance(sig_b, PackedSignatures):
+            if (sig_b.k, sig_b.b) != (self.k, self.b):
+                raise ValueError(
+                    f"packed eval set has (k={sig_b.k}, b={sig_b.b}), "
+                    f"trainer expects (k={self.k}, b={self.b}) -- a "
+                    "mismatched wire would decode silently wrong")
+            return float(accuracy(self.model, sig_b.data, labels,
+                                  feature_kind="packed", b=self.b,
+                                  k=sig_b.k, sentinel=sig_b.sentinel))
         return float(accuracy(self.model, sig_b, labels,
                               feature_kind="hashed", b=self.b))
+
+    def close(self) -> None:
+        """Close every closeable source consumed by ``fit`` (cache dirs)."""
+        for src in self._sources:
+            closer = getattr(src, "close", None)
+            if callable(closer):
+                closer()
+        self._sources = []
+
+    def __enter__(self) -> "OnlineTrainer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def fit(self, source: Iterable, n_epochs: int,
             eval_fn: Optional[Callable[["OnlineTrainer"], float]] = None
@@ -294,6 +426,8 @@ class OnlineTrainer:
         epoch.  ``self.epoch_stats`` accumulates across ``fit`` calls so
         a warm trainer can keep training.
         """
+        if not any(src is source for src in self._sources):
+            self._sources.append(source)
         evals: List[float] = []
         first = len(self.epoch_stats)
         for _ in range(n_epochs):
@@ -304,13 +438,18 @@ class OnlineTrainer:
             for sig, labels in source:
                 t_loaded = time.perf_counter()
                 es.load_s += t_loaded - t_mark
-                sig = jnp.asarray(sig)
+                if isinstance(sig, PackedSignatures):
+                    feats = sig.data
+                    step = self._get_step("packed", sig.sentinel)
+                else:
+                    feats = jnp.asarray(sig)
+                    step = self._get_step("hashed")
                 y = jnp.asarray(labels)
-                n = sig.shape[0]
+                n = feats.shape[0]
                 for i in range(0, n, self.batch_size):
-                    self.state = self._step(self.state,
-                                            sig[i:i + self.batch_size],
-                                            y[i:i + self.batch_size])
+                    self.state = step(self.state,
+                                      feats[i:i + self.batch_size],
+                                      y[i:i + self.batch_size])
                 jax.block_until_ready(self.state.model.w)
                 es.examples += n
                 t_mark = time.perf_counter()

@@ -152,6 +152,113 @@ def test_trainer_kinds_and_sentinel_scheme(shard_paths, kind):
     assert evals[-1] > 0.8, evals
 
 
+def test_cache_close_cleans_owned_temp_dir(shard_paths, tmp_path):
+    """close() removes shards; owned (mkdtemp) dirs are deleted, user
+    dirs survive -- the per-run temp-dir leak is gone."""
+    import os
+    fam = make_family(jax.random.PRNGKey(5), "2u", K, D_BITS)
+    cache = SignatureCache(SignatureStream(shard_paths, fam, b=B,
+                                           chunk_size=64))   # owned tmp dir
+    for _ in cache:
+        pass
+    owned_dir = cache.cache_dir
+    assert os.path.isdir(owned_dir) and cache.paths
+    cache.close()
+    assert not os.path.exists(owned_dir)
+    with pytest.raises(RuntimeError):
+        next(iter(cache))
+
+    user_dir = str(tmp_path / "user_cache")
+    with SignatureCache(SignatureStream(shard_paths, fam, b=B,
+                                        chunk_size=64),
+                        cache_dir=user_dir) as cache2:
+        for _ in cache2:
+            pass
+        assert cache2.paths
+    assert os.path.isdir(user_dir)                   # user dir survives
+    assert not os.listdir(user_dir)                  # but shards are gone
+
+    # trainer-level ownership: close() cascades to consumed sources
+    cache3 = SignatureCache(SignatureStream(shard_paths, fam, b=B,
+                                            chunk_size=64))
+    with OnlineTrainer(k=K, b=B) as trainer:
+        trainer.fit(cache3, 1)
+    assert cache3.closed and not os.path.exists(cache3.cache_dir)
+
+
+def test_cache_max_bytes_evicts_tail_but_stays_bitexact(shard_paths,
+                                                        tmp_path):
+    """A byte budget caps the shard footprint; replay re-hashes the
+    uncached tail and stays bit-exact vs a fresh stream."""
+    fam = make_family(jax.random.PRNGKey(6), "oph", K, D_BITS)
+    fresh = [(np.asarray(s), np.asarray(y))
+             for s, y in SignatureStream(shard_paths, fam, b=B,
+                                         chunk_size=64)]
+    assert len(fresh) > 1
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=64),
+        cache_dir=str(tmp_path), max_cache_bytes=1)  # only chunk 0 fits
+    epoch0 = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    assert cache.stats.shards == 1 == len(cache.paths)
+    assert cache.stats.uncached_chunks == len(fresh) - 1
+    assert cache.stats.examples == sum(s.shape[0] for s, _ in fresh)
+    replay = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    assert len(epoch0) == len(replay) == len(fresh)
+    for (s0, y0), (s1, y1), (s2, y2) in zip(epoch0, replay, fresh):
+        np.testing.assert_array_equal(s0, s2)
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(y0, y2)
+        np.testing.assert_array_equal(y1, y2)
+
+
+def test_packed_stream_trains_like_unpacked(shard_paths):
+    """PackedSignatures chunks (wire words + in-step unpack) produce the
+    exact same SGD trajectory as unpacked signatures."""
+    _, test = generate(TINY)
+    for densify in ("rotation", "sentinel"):
+        fam = make_family(jax.random.PRNGKey(8), "oph", K, D_BITS,
+                          densify=densify)
+        sig_te = batch_signatures(test, fam, b=B)
+        accs = {}
+        for packed in (False, True):
+            stream = SignatureStream(shard_paths, fam, b=B, chunk_size=64,
+                                     packed=packed)
+            trainer = OnlineTrainer(k=K, b=B)
+            trainer.fit(stream, 2)
+            accs[packed] = trainer
+        w0 = np.asarray(accs[False].state.model.w)
+        w1 = np.asarray(accs[True].state.model.w)
+        np.testing.assert_array_equal(w0, w1)
+        if densify == "rotation":        # sentinel needs ~5 epochs to learn
+            acc = accs[True].evaluate(sig_te, test.labels)
+            assert acc > 0.8, (densify, acc)
+
+
+def test_packed_cache_replay_bitexact_and_small(shard_paths, tmp_path):
+    """Packed stream -> .sig cache -> replay: bit-exact, and the sentinel
+    payload is exactly (b+1)/32 of the uint32 baseline."""
+    from repro.kernels import PackedSignatures
+    fam = make_family(jax.random.PRNGKey(9), "oph", K, D_BITS,
+                      densify="sentinel")
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=64, packed=True),
+        cache_dir=str(tmp_path))
+    epoch0 = [(s, np.asarray(y)) for s, y in cache]
+    replay = [(s, np.asarray(y)) for s, y in cache]
+    assert len(epoch0) == len(replay) > 1
+    for (p0, y0), (p1, y1) in zip(epoch0, replay):
+        assert isinstance(p0, PackedSignatures)
+        assert isinstance(p1, PackedSignatures)
+        assert (p1.k, p1.b, p1.sentinel) == (K, B, True)
+        np.testing.assert_array_equal(np.asarray(p0.data),
+                                      np.asarray(p1.data))
+        np.testing.assert_array_equal(y0, y1)
+    n = cache.stats.examples
+    assert cache.stats.bytes_payload == \
+        n * 4 * ((K * (B + 1) + 31) // 32)           # k*(b+1) bits/example
+    assert cache.stats.bytes_payload <= (B + 1) / 32 * (n * K * 4)
+
+
 def test_sentinel_zero_coding_margin():
     """EMPTY bins contribute nothing to the Eq.(5) margin."""
     from repro.core.oph import EMPTY

@@ -19,8 +19,9 @@ import pytest
 from repro.core.estimator import estimate_resemblance_oph
 from repro.core.hashing import Hash2U, Hash4U, PermutationFamily, \
     family_storage_bytes
-from repro.core.oph import (EMPTY, OPH, densify_rotation, hash_evaluations,
-                            oph_match_fraction, oph_signatures, split_hash)
+from repro.core.oph import (EMPTY, OPH, densify_optimal, densify_rotation,
+                            hash_evaluations, oph_match_fraction,
+                            oph_signatures, split_hash)
 from repro.data import word_pair_sets
 from repro.data.sparse import from_lists
 from repro.kernels import batch_signatures, oph2u, oph4u
@@ -79,6 +80,38 @@ def test_oph_kernel_bit_exact_k_sweep(k, family, batch18):
     got = batch_signatures(batch, oph, b=0)
     assert got.shape == (3, k)
     assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("family,b", [
+    ("2u", 0), ("2u", 4),
+    pytest.param("4u", 8, marks=pytest.mark.slow),
+    pytest.param("4u", 1, marks=pytest.mark.slow),
+])
+def test_oph_optimal_densify_kernel_parity(family, b, batch16):
+    """Shrivastava-2017 optimal densification: engine epilogue == reference."""
+    s, k = 16, 128
+    oph = OPH.create(jax.random.PRNGKey(b + 17), k, s, family, "optimal")
+    want = oph_signatures(batch16.indices, batch16.mask, oph, b=b)
+    got = batch_signatures(batch16, oph, b=b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_densify_optimal_properties():
+    """Genuine bins untouched; empty bins copy a genuine same-row donor;
+    all-empty rows stay EMPTY."""
+    s, k = 12, 64
+    oph = OPH.create(jax.random.PRNGKey(5), k, s, "2u", "sentinel")
+    batch = _random_batch(6, 40, s, seed=9)      # sparse: many empty bins
+    sent = np.asarray(oph_signatures(batch.indices, batch.mask, oph))
+    dense = np.asarray(densify_optimal(jnp.asarray(sent)))
+    holes = sent == _E
+    assert holes.any() and not (dense == _E).any()
+    assert np.array_equal(dense[~holes], sent[~holes])
+    for i in range(sent.shape[0]):
+        genuine = set(sent[i][~holes[i]].tolist())
+        assert all(v in genuine for v in dense[i][holes[i]].tolist())
+    all_empty = np.full((2, k), _E, np.uint32)
+    assert (np.asarray(densify_optimal(jnp.asarray(all_empty))) == _E).all()
 
 
 def test_oph_kernel_multi_lane_block(batch18):
@@ -266,9 +299,10 @@ def test_oph_storage_and_cost_accounting():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("densify,R", [
-    ("sentinel", 0.2), ("rotation", 0.7),
+    ("sentinel", 0.2), ("rotation", 0.7), ("optimal", 0.2),
     pytest.param("sentinel", 0.7, marks=pytest.mark.slow),
     pytest.param("rotation", 0.2, marks=pytest.mark.slow),
+    pytest.param("optimal", 0.7, marks=pytest.mark.slow),
 ])
 def test_oph_estimator_unbiased(densify, R):
     """Mean OPH estimate over seeds within 4 s.e. of the true Jaccard.
@@ -362,15 +396,27 @@ def test_oph_preprocess_shards_roundtrip(tmp_path):
                               loader_kwargs={"lane_multiple": 8})
     assert stats.examples == n_total >= 64
     packed, labels, k, b = read_signature_shard(
-        str(tmp_path / "sig" / "sig_00000.npz"))
+        str(tmp_path / "sig" / "sig_00000.sig"))
     assert (k, b) == (128, 8)
     sig = np.asarray(unpack_signatures(jnp.asarray(packed), b, k))
     assert sig.shape == (64, 128) and sig.max() < 256
 
-    with pytest.raises(ValueError):
-        preprocess_shards(paths, str(tmp_path / "bad"),
-                          OPH.create(jax.random.PRNGKey(0), 128, 14, "2u",
-                                     "sentinel"), b=8)
+    # sentinel OPH now packs too: (b+1)-bit codes, EMPTY stored as 2^b
+    from repro.data.sigshard import read_sig_shard
+    sent = OPH.create(jax.random.PRNGKey(0), 128, 14, "2u", "sentinel")
+    preprocess_shards(paths, str(tmp_path / "sig_sent"), sent, b=8,
+                      chunk_size=64, loader_kwargs={"lane_multiple": 8})
+    words, _, meta = read_sig_shard(str(tmp_path / "sig_sent" /
+                                        "sig_00000.sig"))
+    assert meta.sentinel and meta.code_bits == 9
+    assert meta.words == (128 * 9 + 31) // 32          # k*(b+1) bits/example
+    from repro.core.bbit import unpack_codes
+    codes = np.asarray(unpack_codes(jnp.asarray(words), 9, 128))
+    assert codes.max() <= 256                          # values + EMPTY code
+    with pytest.raises(ValueError):                    # legacy 4-tuple reader
+        read_signature_shard(str(tmp_path / "sig_sent" /  # refuses (b+1)-bit
+                                 "sig_00000.sig"))        # codes
+
     with pytest.raises(TypeError):
         preprocess_shards(paths, str(tmp_path / "bad2"),
                           OPH.create(jax.random.PRNGKey(0), 32, 10, "perm"))
