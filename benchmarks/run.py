@@ -30,6 +30,7 @@ MODULES = [
     ("loading_time", "Figs 16, 18 / Table 4"),
     ("resemblance_mse", "Figs 20-22 / App. A"),
     ("signature_engine", "§6 / Table 2 wire format"),
+    ("search_index", "§1 search workload (repro.index)"),
 ]
 
 
@@ -58,9 +59,11 @@ def main() -> None:
 
     all_rows = []
     failures = []
+    ran = 0
     for mod_name, paper_ref in MODULES:
         if not selected(mod_name):
             continue
+        ran += 1
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
@@ -74,7 +77,14 @@ def main() -> None:
             print(f"# {mod_name} FAILED:", file=sys.stderr)
             traceback.print_exc()
     print(fmt_rows(all_rows))
+    if not ran:
+        # a substring --only matching nothing must not look like success
+        print(f"# --only {args.only!r} selected no modules; available: "
+              f"{sorted(name for name, _ in MODULES)}", file=sys.stderr)
+        sys.exit(2)
     if failures:
+        # a raising module is a harness failure, not a summary footnote:
+        # CI must go red
         print(f"# FAILURES: {failures}", file=sys.stderr)
         sys.exit(1)
 

@@ -16,7 +16,8 @@ from repro.core.hashing import (Hash2U, Hash4U, PermutationFamily, MERSENNE_P,
                                 mulmod_mersenne31, umul32_wide)
 from repro.core.minhash import (minhash_signatures, resemblance,
                                 signature_matches)
-from repro.core.oph import (EMPTY, OPH, densify_rotation, hash_evaluations,
+from repro.core.oph import (EMPTY, OPH, densify_fast, densify_optimal,
+                            densify_rotation, hash_evaluations,
                             oph_match_fraction, oph_signatures)
 from repro.core.bbit import (expand_onehot, expand_tokens, lowest_bits,
                              pack_signatures, raw_storage_bits, storage_bits,
@@ -30,7 +31,8 @@ from repro.core.estimator import (bbit_constants, collision_prob,
 from repro.core.vw import VWHasher
 
 __all__ = [
-    "EMPTY", "OPH", "densify_rotation", "hash_evaluations",
+    "EMPTY", "OPH", "densify_fast", "densify_optimal", "densify_rotation",
+    "hash_evaluations",
     "oph_match_fraction", "oph_signatures",
     "Hash2U", "Hash4U", "PermutationFamily", "MERSENNE_P", "add64",
     "family_storage_bytes", "hash2u_apply", "hash4u_apply", "mod_mersenne31",

@@ -15,16 +15,22 @@ Collision calculus (standard LSH S-curve): a pair with resemblance R
 matches one band with prob ~ P_b(R)^r and any band with
 1 - (1 - P_b^r)^n, where P_b = C1 + (1 - C2) R is the paper's b-bit
 collision probability -- so banding composes exactly with Theorem 1.
+
+The banding *machinery* now lives with the search subsystem
+(``repro.index``): key packing and the S-curve are
+``repro.index.banding``, and the bucket grouping is the same sorted
+posting-table construction the ``.idx`` index persists
+(``repro.index.builder.build_band_tables``) -- this module is the thin
+offline-dedup entry point on top of it.  Imports are function-local so
+the core layer carries no import-time dependency on the subsystem.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.estimator import bbit_constants, estimate_resemblance
@@ -45,38 +51,44 @@ def band_keys(sig_b: jax.Array, cfg: LSHConfig) -> jax.Array:
     """Pack each band's r b-bit values into one integer bucket key.
 
     sig_b: (n, k) uint32 b-bit signatures (k = n_bands * r).
-    Returns (n, n_bands) uint64-safe int64 keys (r*b <= 60 required).
+    Returns (n, n_bands) uint32 keys (r*b <= 32 required).  Delegates
+    to ``repro.index.banding.band_keys_from_codes`` -- the same key the
+    search index computes from packed wire words on device.
     """
+    from repro.index.banding import BandingConfig, band_keys_from_codes
     n, k = sig_b.shape
     if k != cfg.k:
         raise ValueError(f"signature width {k} != bands*rows {cfg.k}")
-    if cfg.rows_per_band * cfg.b > 60:
-        raise ValueError("band key exceeds 60 bits; reduce r or b")
-    z = sig_b.astype(jnp.int64).reshape(n, cfg.n_bands, cfg.rows_per_band)
-    shifts = (jnp.arange(cfg.rows_per_band, dtype=jnp.int64) * cfg.b)
-    return jnp.sum(z << shifts, axis=-1)
+    return band_keys_from_codes(
+        sig_b, BandingConfig(cfg.n_bands, cfg.rows_per_band, cfg.b))
 
 
 def match_probability(R: float, f1: int, f2: int, D: int,
                       cfg: LSHConfig) -> float:
     """Analytic S-curve: P[candidate] for a pair with resemblance R."""
+    from repro.index.banding import s_curve
     c = bbit_constants(f1, f2, D, cfg.b)
     pb = float(c.C1 + (1.0 - c.C2) * R)
-    return 1.0 - (1.0 - pb ** cfg.rows_per_band) ** cfg.n_bands
+    return s_curve(pb, cfg.n_bands, cfg.rows_per_band)
 
 
 def candidate_pairs(keys: np.ndarray) -> List[Tuple[int, int]]:
-    """All document pairs sharing at least one band bucket."""
-    buckets: Dict[Tuple[int, int], List[int]] = defaultdict(list)
-    n, n_bands = keys.shape
-    for band in range(n_bands):
-        for i in range(n):
-            buckets[(band, int(keys[i, band]))].append(i)
+    """All document pairs sharing at least one band bucket.
+
+    Built on the index subsystem's sorted posting tables (the structure
+    the ``.idx`` file persists) instead of the old python-dict pass.
+    """
+    from repro.index.builder import build_band_tables
+    band_offsets, _, bucket_offsets, postings = \
+        build_band_tables(np.asarray(keys))
     pairs = set()
-    for members in buckets.values():
-        for a in range(len(members)):
-            for b_ in range(a + 1, len(members)):
-                pairs.add((members[a], members[b_]))
+    n_bands = band_offsets.size - 1
+    for band in range(n_bands):
+        for t in range(band_offsets[band], band_offsets[band + 1]):
+            members = postings[bucket_offsets[t]:bucket_offsets[t + 1]]
+            for a in range(members.size):
+                for b_ in range(a + 1, members.size):
+                    pairs.add((int(members[a]), int(members[b_])))
     return sorted(pairs)
 
 

@@ -30,6 +30,13 @@ receive no element of S are *empty*; two strategies are implemented:
     until it hits a non-empty bin, and copies that bin's value.  Breaks
     the rotation scheme's donor correlation between neighbouring empty
     bins, reducing estimator variance; signatures remain minhash-like.
+  * ``densify="fast"``: Mai et al. (UAI 2020) fast densification -- the
+    probing direction is reversed: in each round every originally
+    NON-empty bin hashes to one target bin (the probe sequence depends
+    only on (bin, round, k), so it is shared across sets) and fills it
+    if still empty; ties inside a round resolve to the lowest donor bin
+    id.  Expected O(k log k) fill work versus the empty-bin-probing
+    schemes' O(k^2 / m), with the same copied-value semantics.
 
 The single hash function is any of the existing families from
 ``repro.core.hashing`` instantiated with ``k == 1`` (2U / 4U /
@@ -82,7 +89,7 @@ class OPH:
 
     base: BaseFamily
     k: int                      # number of bins == signature length
-    densify: str = "rotation"   # "rotation" | "sentinel" | "optimal"
+    densify: str = "rotation"   # "rotation"|"sentinel"|"optimal"|"fast"
 
     def __post_init__(self):
         if self.base.k != 1:
@@ -92,9 +99,9 @@ class OPH:
             raise ValueError(f"OPH needs s <= 31 (rotation offsets overflow), got {s}")
         if self.k & (self.k - 1) or not (1 <= self.k <= (1 << s)):
             raise ValueError(f"k must be a power of two in [1, 2^{s}], got {self.k}")
-        if self.densify not in ("rotation", "sentinel", "optimal"):
-            raise ValueError("densify must be 'rotation', 'sentinel' or "
-                             f"'optimal', got {self.densify!r}")
+        if self.densify not in ("rotation", "sentinel", "optimal", "fast"):
+            raise ValueError("densify must be 'rotation', 'sentinel', "
+                             f"'optimal' or 'fast', got {self.densify!r}")
 
     @property
     def s(self) -> int:
@@ -182,7 +189,7 @@ def densify_and_bbit(sig: jax.Array, bin_width: int, densify: str,
     path (``repro.kernels.engine``) apply after the raw binned minima, so
     the two stay bit-exact by construction.  Under ``sentinel`` the EMPTY
     marker survives the b-bit mask (the estimator / learning layer handle
-    it); under ``rotation``/``optimal`` every bin is defined except in
+    it); under ``rotation``/``optimal``/``fast`` every bin is defined except in
     all-empty rows, which fold to the all-ones b-bit code -- the same
     value the k-pass minhash path assigns empty sets.
     """
@@ -190,9 +197,11 @@ def densify_and_bbit(sig: jax.Array, bin_width: int, densify: str,
         sig = densify_rotation(sig, bin_width)
     elif densify == "optimal":
         sig = densify_optimal(sig)
+    elif densify == "fast":
+        sig = densify_fast(sig)
     if b > 0:
         mask_b = _U32((1 << b) - 1)
-        if densify in ("rotation", "optimal"):
+        if densify in ("rotation", "optimal", "fast"):
             sig = sig & mask_b        # EMPTY (all-empty rows) -> 2^b - 1
         else:
             sig = jnp.where(sig != EMPTY, sig & mask_b, sig)
@@ -281,6 +290,58 @@ def densify_optimal(sig: jax.Array, max_probes: int = 0) -> jax.Array:
     first = jnp.min(cand, axis=1, keepdims=True)
     fallback = jnp.take_along_axis(sig, first % k, axis=1)
     return jnp.where(resolved, out, jnp.broadcast_to(fallback, out.shape))
+
+
+def densify_fast(sig: jax.Array, max_rounds: int = 0) -> jax.Array:
+    """Mai et al. (UAI 2020) fast densification: donors broadcast.
+
+    The probing direction of ``densify_optimal`` reversed: on round t,
+    every originally NON-empty bin j targets bin ``_optimal_probe(j, t)``
+    (the same (j, t, k)-only probe hash, so the walk is shared across
+    sets -- matched empty bins receive matched donors) and fills it if
+    it is still empty.  Multiple donors landing on one empty bin in the
+    same round resolve deterministically to the lowest donor bin id.
+    Expected O(k log k) total fill work instead of the empty-bin-probing
+    schemes' O(k^2 / m) when most bins are empty.
+
+    Rows that are entirely empty stay all-EMPTY.  The bounded
+    ``while_loop`` exits once every empty bin is filled; the
+    deterministic fallback after ``max_rounds`` (the row's first
+    non-empty bin) keeps the function total, mirroring
+    ``densify_optimal``.
+    """
+    n, k = sig.shape
+    if max_rounds <= 0:
+        max_rounds = 8 * k + 64
+    nonempty = sig != EMPTY
+    any_ne = jnp.any(nonempty, axis=1, keepdims=True)
+    j = jnp.arange(k, dtype=jnp.int32)
+
+    def cond(state):
+        t, _, filled = state
+        return (t < max_rounds) & ~jnp.all(filled)
+
+    def body(state):
+        t, out, filled = state
+        tgt = _optimal_probe(j, t, k)                              # (k,)
+        # scatter-min of the donor bin id into its target: per row, the
+        # winning donor for a bin is the lowest-id non-empty bin that
+        # targeted it this round (2k = "no donor")
+        donor_id = jnp.where(nonempty, j[None, :], jnp.int32(2 * k))
+        donor_at = jnp.full((n, k), jnp.int32(2 * k)).at[
+            :, tgt].min(donor_id)
+        newly = ~filled & (donor_at < 2 * k)
+        donor_val = jnp.take_along_axis(sig, donor_at % k, axis=1)
+        return (t + 1, jnp.where(newly, donor_val, out),
+                filled | (donor_at < 2 * k))
+
+    init = (jnp.zeros((), jnp.int32), sig, nonempty | ~any_ne)
+    _, out, filled = jax.lax.while_loop(cond, body, init)
+    # pathological unfilled bins: deterministic first-non-empty fallback
+    cand = jnp.where(nonempty, j[None, :], jnp.int32(2 * k))
+    first = jnp.min(cand, axis=1, keepdims=True)
+    fallback = jnp.take_along_axis(sig, first % k, axis=1)
+    return jnp.where(filled, out, jnp.broadcast_to(fallback, out.shape))
 
 
 # ---------------------------------------------------------------------------

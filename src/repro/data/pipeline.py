@@ -219,6 +219,9 @@ class ChunkedLoader:
         self.max_retries = max_retries
         self.lane_multiple = lane_multiple
         self.stats = LoaderStats()
+        # examples per shard index, recorded as shards are read; lets a
+        # consumer resume mid-stream (``resume_point`` + ``iter_from``)
+        self.shard_examples: dict = {}
         self._reader = read_shard_binary if fmt == "binary" else read_shard_libsvm
 
     # -- straggler-aware shard read ------------------------------------
@@ -227,12 +230,19 @@ class ChunkedLoader:
                                  deadline=self.deadline,
                                  max_retries=self.max_retries)
 
-    def _chunk_iter(self) -> Iterator[SparseBatch]:
+    def _chunk_iter(self, start_shard: int = 0,
+                    skip_examples: int = 0) -> Iterator[SparseBatch]:
         pending_sets: List[np.ndarray] = []
         pending_labels: List[float] = []
-        for i, path in enumerate(self.shard_paths):
+        skip = skip_examples
+        for i in range(start_shard, len(self.shard_paths)):
             worker = i % self.n_workers
-            sets, labels = self._read_shard(path, worker)
+            sets, labels = self._read_shard(self.shard_paths[i], worker)
+            self.shard_examples[i] = len(sets)
+            if skip:
+                take = min(skip, len(sets))
+                sets, labels = sets[take:], labels[take:]
+                skip -= take
             pending_sets.extend(sets)
             pending_labels.extend(labels.tolist())
             while len(pending_sets) >= self.chunk_size:
@@ -248,8 +258,39 @@ class ChunkedLoader:
         return from_lists(sets, np.asarray(labels, np.float32),
                           max_nnz=self.max_nnz, lane_multiple=self.lane_multiple)
 
+    def resume_point(self, example_offset: int):
+        """Map a stream example offset -> (shard index, in-shard skip).
+
+        Needs per-shard example counts, i.e. a completed prior pass
+        (``shard_examples``).  This is how the signature cache starts a
+        budget-truncated replay at the first *uncached* chunk instead of
+        re-reading the cached prefix's raw shards.
+        """
+        cum = 0
+        for i in range(len(self.shard_paths)):
+            n_i = self.shard_examples.get(i)
+            if n_i is None:
+                raise ValueError(
+                    f"resume_point({example_offset}) needs shard {i}'s "
+                    "example count; complete a full pass first")
+            if cum + n_i > example_offset:
+                return i, example_offset - cum
+            cum += n_i
+        return len(self.shard_paths), 0
+
+    def iter_from(self, start_shard: int = 0,
+                  skip_examples: int = 0) -> Iterator[SparseBatch]:
+        """Iterate chunks starting at ``start_shard``, dropping the first
+        ``skip_examples`` examples (same prefetch machinery as iteration
+        from the top).  Chunk boundaries line up with a full pass when
+        (start_shard, skip_examples) came from ``resume_point`` of a
+        chunk-aligned offset."""
+        yield from prefetch_iter(
+            lambda: self._chunk_iter(start_shard, skip_examples),
+            self.prefetch)
+
     def __iter__(self) -> Iterator[SparseBatch]:
-        yield from prefetch_iter(self._chunk_iter, self.prefetch)
+        yield from self.iter_from()
 
 
 class SignatureStream:

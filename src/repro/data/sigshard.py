@@ -93,7 +93,8 @@ def read_sig_meta(path: str) -> SigShardMeta:
     version, n, k, b, code_bits, words, flags = struct.unpack(
         "<7I", head[4:32])
     if version != VERSION:
-        raise ValueError(f"{path}: unsupported .sig version {version}")
+        raise ValueError(f"{path}: unsupported .sig version {version} "
+                         f"(this build reads version {VERSION})")
     return SigShardMeta(n=n, k=k, b=b, code_bits=code_bits, words=words,
                         sentinel=bool(flags & _FLAG_SENTINEL))
 

@@ -1,0 +1,39 @@
+"""repro.index: sharded b-bit similarity search over packed signatures.
+
+The retrieval workload (paper §1's crawling/dedup framing; Li-Owen-Zhang
+arXiv:1208.1259 "One Permutation Hashing for Efficient Search and
+Learning") served from the same packed ``.sig`` wire format the
+preprocessing and learning stacks already produce:
+
+  banding.py -- the LSH banding math: band-key packing (device-side,
+                straight from packed words), the S-curve, and the
+                ``choose_band_config`` tuner.
+  builder.py -- ``build_index``: ``.sig`` shards -> one raw mmap-able
+                ``.idx`` file (banded bucket tables + packed signature
+                payload), with zero host-side unpacking; ``load_index``
+                -> ``SigIndex`` (mmap'd tables + device-resident packed
+                corpus matrix).
+  query.py   -- ``IndexSearcher``: exact top-k (packed-Hamming kernel
+                brute force over corpus blocks + Theorem-1 rerank) and
+                LSH candidate generation + kernel rerank, behind one
+                API, with batched query admission.
+
+The scoring hot path is ``repro.kernels.hamming.packed_match`` -- a
+Pallas kernel registered in the SignatureEngine backend registry
+(scheme ``"hamming"``), so it inherits interpret/tpu/ref execution and
+TuningTable block sizes.
+"""
+
+from repro.index.banding import (BandingConfig, band_keys_from_codes,
+                                 band_keys_packed, choose_band_config,
+                                 s_curve)
+from repro.index.builder import (IndexMeta, SigIndex, build_band_tables,
+                                 build_index, load_index, read_index_meta)
+from repro.index.query import IndexSearcher, SearchResult, resemblance_scores
+
+__all__ = [
+    "BandingConfig", "IndexMeta", "IndexSearcher", "SearchResult",
+    "SigIndex", "band_keys_from_codes", "band_keys_packed",
+    "build_band_tables", "build_index", "choose_band_config", "load_index",
+    "read_index_meta", "resemblance_scores", "s_curve",
+]

@@ -1,0 +1,159 @@
+"""LSH banding math for the similarity-search index.
+
+This module is the canonical home of the banding calculus that
+``repro.core.lsh`` introduced for offline dedup (and now delegates to):
+
+  * ``BandingConfig``       -- n_bands x rows_per_band bands over
+                               ``code_bits``-wide signature values,
+  * ``band_keys_from_codes``-- pack each band's r codes into one integer
+                               bucket key (pure jnp, works on device),
+  * ``band_keys_packed``    -- the index-facing variant: band keys
+                               straight from packed wire words, unpacked
+                               *inside the jit* so the host only ever
+                               sees packed words and the (n, n_bands)
+                               keys,
+  * ``s_curve`` / ``choose_band_config`` -- the standard LSH collision
+    calculus 1 - (1 - p^r)^n_bands composed with the paper's Theorem-1
+    b-bit collision probability, and a tuner that picks the most
+    selective (n_bands, r) still predicted to clear a recall target at
+    the resemblance threshold of interest.
+
+Sentinel OPH wires band over the (b+1)-bit codes with EMPTY = 2^b
+included: two sets whose bins are jointly empty collide in that slot,
+which only adds candidates (recall can't drop); the kernel rerank then
+applies the exact Li-Owen-Zhang correction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pack import PackSpec, unpack_device
+
+
+MAX_KEY_BITS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class BandingConfig:
+    """n_bands bands of rows_per_band ``code_bits``-wide values each.
+
+    Band keys are computed in uint32 (``MAX_KEY_BITS`` = 32), so
+    ``rows_per_band * code_bits <= 32`` -- every shift is < 32 and the
+    key is the exact packed value, identical on every backend and
+    independent of jax's x64 mode (an ``.idx`` built on one host must
+    produce the same keys a query computes on another).
+    """
+
+    n_bands: int
+    rows_per_band: int
+    code_bits: int               # bits per banded value (b, or b+1 sentinel)
+
+    def __post_init__(self):
+        if self.n_bands < 1 or self.rows_per_band < 1:
+            raise ValueError(f"need n_bands, rows_per_band >= 1, got "
+                             f"({self.n_bands}, {self.rows_per_band})")
+        if self.rows_per_band * self.code_bits > MAX_KEY_BITS:
+            raise ValueError(
+                f"band key needs {self.rows_per_band * self.code_bits} bits "
+                f"> {MAX_KEY_BITS} (uint32 keys); reduce rows_per_band or "
+                f"code_bits")
+
+    @property
+    def k(self) -> int:
+        """Signature values consumed by the banding (first k of each row)."""
+        return self.n_bands * self.rows_per_band
+
+
+def band_keys_from_codes(codes: jax.Array, cfg: BandingConfig) -> jax.Array:
+    """(n, >=cfg.k) uint32 codes -> (n, n_bands) uint32 bucket keys.
+
+    Band i's key packs codes [i*r, (i+1)*r) little-endian at
+    ``code_bits`` per value; r*code_bits <= 32 (``BandingConfig``) makes
+    the packing exact with every shift well-defined.  Columns past
+    ``cfg.k`` are ignored (an index may band over a prefix of the
+    signature).
+    """
+    n, k = codes.shape
+    if k < cfg.k:
+        raise ValueError(f"signature width {k} < bands*rows {cfg.k}")
+    z = codes[:, :cfg.k].astype(jnp.uint32).reshape(
+        n, cfg.n_bands, cfg.rows_per_band)
+    if cfg.code_bits < 32:
+        z = z & jnp.uint32((1 << cfg.code_bits) - 1)
+    shifts = jnp.arange(cfg.rows_per_band, dtype=jnp.uint32) * cfg.code_bits
+    return jnp.sum(z << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _band_keys_packed_jit(words, spec: PackSpec, cfg: BandingConfig):
+    codes = unpack_device(words, spec)
+    if spec.sentinel:
+        # band over the raw (b+1)-bit codes: EMPTY must key as 2^b, not
+        # as the 0xFFFFFFFF marker unpack_device restores
+        codes = jnp.where(codes == jnp.uint32(0xFFFFFFFF),
+                          jnp.uint32(spec.empty_code), codes)
+    return band_keys_from_codes(codes, cfg)
+
+
+def band_keys_packed(words: jax.Array, spec: PackSpec,
+                     cfg: BandingConfig) -> jax.Array:
+    """Band keys straight from packed wire words (device-side unpack).
+
+    The (n, k) signature matrix only ever exists as a traced value
+    inside this jit -- the host sees packed words in, uint32 keys out.
+    """
+    if cfg.code_bits != spec.code_bits:
+        raise ValueError(f"banding over {cfg.code_bits}-bit values, wire "
+                         f"carries {spec.code_bits}-bit codes")
+    return _band_keys_packed_jit(words, spec, cfg)
+
+
+# ---------------------------------------------------------------------------
+# S-curve calculus
+# ---------------------------------------------------------------------------
+
+def s_curve(p_collide: float, n_bands: int, rows_per_band: int) -> float:
+    """P[candidate] when one banded value collides with prob p_collide."""
+    return 1.0 - (1.0 - float(p_collide) ** rows_per_band) ** n_bands
+
+
+def sparse_collision_prob(R: float, b: int) -> float:
+    """Theorem 1 in the sparse limit r -> 0: P_b = 2^-b + (1 - 2^-b) R."""
+    c = 2.0 ** -b
+    return c + (1.0 - c) * R
+
+
+def choose_band_config(k: int, b: int, *, code_bits: int = 0,
+                       threshold: float = 0.5, target_recall: float = 0.95
+                       ) -> BandingConfig:
+    """Most selective banding still predicted to clear ``target_recall``.
+
+    Sweeps rows_per_band from large (selective, steep S-curve) to small,
+    keeping the first r whose predicted candidate probability at
+    resemblance ``threshold`` -- Theorem-1 sparse-limit collision prob
+    composed through the S-curve -- reaches the target.  ``n_bands`` is
+    ``k // r`` (the banding may consume a prefix of the signature).  For
+    sentinel wires pass ``code_bits=b+1``; the prediction still uses the
+    b-bit collision probability, a lower bound on the code-level one
+    (joint-EMPTY collisions only add candidates), so the choice stays
+    conservative.
+    """
+    cb = code_bits or b
+    pb = sparse_collision_prob(threshold, b)
+    best = None
+    for r in range(min(k, MAX_KEY_BITS // cb), 0, -1):
+        n_bands = k // r
+        cfg = BandingConfig(n_bands, r, cb)
+        if s_curve(pb, n_bands, r) >= target_recall:
+            best = cfg
+            break
+    if best is None:
+        raise ValueError(
+            f"no (n_bands, r) over k={k}, b={b} reaches recall "
+            f"{target_recall} at threshold {threshold}; lower the target")
+    return best

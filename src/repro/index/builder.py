@@ -1,0 +1,353 @@
+"""Build and load the raw mmap-able ``.idx`` similarity-search index.
+
+``build_index`` turns packed ``.sig`` signature shards
+(``repro.data.sigshard``) into one self-contained index file without
+ever unpacking a signature on the host: the packed payload is copied
+through verbatim, and the banded bucket tables are computed from band
+keys that a jit (``repro.index.banding.band_keys_packed``) derives from
+the packed words on device.
+
+Layout (little-endian; every section 64-byte aligned):
+
+    0   magic   b"RIDX"
+    4   u32     version (1)
+    8   u32     n              documents
+    12  u32     k              signature values per document
+    16  u32     b              b-bit width of genuine values
+    20  u32     code_bits      b, or b+1 for sentinel wires
+    24  u32     words          uint32 words per packed row
+    28  u32     flags          bit 0: sentinel; bit 1: set sizes present
+    32  u32     n_bands
+    36  u32     rows_per_band
+    40  u32     n_keys         total distinct (band, key) buckets
+    44  u32     s              universe bits (0 = unknown)
+    48  ..64    reserved (zero)
+
+    f32[n]                 labels (carried from the .sig shards)
+    u32[n]                 set sizes            (iff flag bit 1)
+    i64[n_bands + 1]       band_offsets         (into keys / bucket_offsets)
+    i64[n_keys]            keys                 (sorted within each band)
+    i64[n_keys + 1]        bucket_offsets       (into postings, global)
+    u32[n_bands * n]       postings             (doc ids per bucket)
+    u32[n * words]         packed signature payload (row-major)
+
+Bucket lookup for (band i, key x): binary-search x in
+``keys[band_offsets[i]:band_offsets[i+1]]``; slot t's posting list is
+``postings[bucket_offsets[t]:bucket_offsets[t+1]]``.  Everything is a
+flat array, so ``load_index(mmap=True)`` serves straight off disk; the
+packed payload additionally uploads once to the device
+(``SigIndex.corpus``) for kernel scoring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sigshard import read_sig_shard
+from repro.index.banding import BandingConfig, band_keys_packed
+from repro.kernels.pack import PackSpec
+
+MAGIC = b"RIDX"
+VERSION = 1
+HEADER_BYTES = 64
+_ALIGN = 64
+_FLAG_SENTINEL = 1
+_FLAG_SET_SIZES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexMeta:
+    """Decoded ``.idx`` header."""
+
+    n: int
+    k: int
+    b: int
+    code_bits: int
+    words: int
+    sentinel: bool
+    has_set_sizes: bool
+    n_bands: int
+    rows_per_band: int
+    n_keys: int
+    s: int = 0
+
+    @property
+    def spec(self) -> PackSpec:
+        return PackSpec(self.k, self.b, self.sentinel)
+
+    @property
+    def banding(self) -> BandingConfig:
+        return BandingConfig(self.n_bands, self.rows_per_band, self.code_bits)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Packed signature payload only -- the paper's wire accounting."""
+        return 4 * self.n * self.words
+
+
+def _align(offset: int) -> int:
+    return ((offset + _ALIGN - 1) // _ALIGN) * _ALIGN
+
+
+def _sections(meta: IndexMeta) -> List[Tuple[str, np.dtype, int]]:
+    """(name, dtype, count) in file order."""
+    out = [("labels", np.dtype(np.float32), meta.n)]
+    if meta.has_set_sizes:
+        out.append(("set_sizes", np.dtype(np.uint32), meta.n))
+    out += [
+        ("band_offsets", np.dtype(np.int64), meta.n_bands + 1),
+        ("keys", np.dtype(np.int64), meta.n_keys),
+        ("bucket_offsets", np.dtype(np.int64), meta.n_keys + 1),
+        ("postings", np.dtype(np.uint32), meta.n_bands * meta.n),
+        ("payload", np.dtype(np.uint32), meta.n * meta.words),
+    ]
+    return out
+
+
+def _section_offsets(meta: IndexMeta) -> dict:
+    offsets, pos = {}, HEADER_BYTES
+    for name, dtype, count in _sections(meta):
+        pos = _align(pos)
+        offsets[name] = pos
+        pos += dtype.itemsize * count
+    offsets["__end__"] = pos
+    return offsets
+
+
+# ---------------------------------------------------------------------------
+# Band bucket tables (shared with repro.core.lsh.candidate_pairs)
+# ---------------------------------------------------------------------------
+
+def build_band_tables(keys: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """(n, n_bands) band keys -> flat sorted bucket tables.
+
+    Returns ``(band_offsets, sorted_keys, bucket_offsets, postings)``:
+    per band, the distinct keys in sorted order plus each key's posting
+    list of doc ids (ascending) -- the O(n log n) replacement for the
+    old python-dict banding pass, and exactly what ``.idx`` persists.
+    """
+    keys = np.asarray(keys)
+    n, n_bands = keys.shape
+    band_offsets = np.zeros(n_bands + 1, np.int64)
+    all_keys, bucket_sizes, postings = [], [], []
+    for band in range(n_bands):
+        col = keys[:, band]
+        order = np.argsort(col, kind="stable")       # doc ids stay ascending
+        uniq, counts = np.unique(col, return_counts=True)
+        all_keys.append(uniq.astype(np.int64))
+        bucket_sizes.append(counts.astype(np.int64))
+        postings.append(order.astype(np.uint32))
+        band_offsets[band + 1] = band_offsets[band] + uniq.size
+    sorted_keys = (np.concatenate(all_keys) if all_keys
+                   else np.zeros(0, np.int64))
+    sizes = (np.concatenate(bucket_sizes) if bucket_sizes
+             else np.zeros(0, np.int64))
+    bucket_offsets = np.zeros(sorted_keys.size + 1, np.int64)
+    np.cumsum(sizes, out=bucket_offsets[1:])
+    return (band_offsets, sorted_keys, bucket_offsets,
+            np.concatenate(postings) if postings else np.zeros(0, np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
+                *, set_sizes: Optional[np.ndarray] = None,
+                s: int = 0) -> IndexMeta:
+    """Packed ``.sig`` shards -> one ``.idx`` file.
+
+    The corpus is never unpacked on the host: shard payloads are
+    memory-mapped and written through as-is, and band keys come off the
+    device (``band_keys_packed``).  ``set_sizes`` (original nonzero
+    counts per document, same order as the shards) and ``s`` (universe
+    bits) are optional -- when present, queries get the exact Theorem-1
+    debiasing constants instead of the sparse-limit ones.
+    """
+    if not sig_paths:
+        raise ValueError("build_index needs at least one .sig shard")
+    # shard payloads stay memory-mapped: band keys (small) are computed
+    # per shard on device, and the payload section is streamed through
+    # shard by shard at write time -- peak host RAM is one shard, not
+    # the corpus
+    shard_words, label_parts, key_parts = [], [], []
+    meta0 = None
+    for path in sig_paths:
+        words, labels, sm = read_sig_shard(path, mmap=True)
+        if meta0 is None:
+            meta0 = sm
+            if not 1 <= meta0.b <= 16:
+                raise ValueError(
+                    f"index needs the packed wire format (1 <= b <= 16), "
+                    f"shards carry b={meta0.b}")
+            if cfg.code_bits != meta0.code_bits:
+                raise ValueError(
+                    f"banding over {cfg.code_bits}-bit values, shards "
+                    f"carry {meta0.code_bits}-bit codes")
+        elif (sm.k, sm.b, sm.code_bits, sm.words, sm.sentinel) != \
+                (meta0.k, meta0.b, meta0.code_bits, meta0.words,
+                 meta0.sentinel):
+            raise ValueError(f"{path}: wire format {sm} != first shard "
+                             f"{meta0}")
+        shard_words.append(words)
+        label_parts.append(labels)
+        spec = PackSpec(sm.k, sm.b, sm.sentinel)
+        key_parts.append(np.asarray(
+            band_keys_packed(jnp.asarray(np.ascontiguousarray(words)),
+                             spec, cfg)))
+    labels = np.concatenate(label_parts)
+    keys = np.concatenate(key_parts)
+    n = int(labels.shape[0])
+    if set_sizes is not None:
+        set_sizes = np.ascontiguousarray(set_sizes, np.uint32)
+        if set_sizes.shape != (n,):
+            raise ValueError(f"set_sizes shape {set_sizes.shape} != ({n},)")
+
+    band_offsets, sorted_keys, bucket_offsets, postings = \
+        build_band_tables(keys)
+    meta = IndexMeta(n=n, k=meta0.k, b=meta0.b, code_bits=meta0.code_bits,
+                     words=meta0.words, sentinel=meta0.sentinel,
+                     has_set_sizes=set_sizes is not None,
+                     n_bands=cfg.n_bands, rows_per_band=cfg.rows_per_band,
+                     n_keys=int(sorted_keys.size), s=s)
+    arrays = {"labels": labels.astype(np.float32),
+              "band_offsets": band_offsets, "keys": sorted_keys,
+              "bucket_offsets": bucket_offsets, "postings": postings}
+    if set_sizes is not None:
+        arrays["set_sizes"] = set_sizes
+    flags = ((_FLAG_SENTINEL if meta.sentinel else 0)
+             | (_FLAG_SET_SIZES if meta.has_set_sizes else 0))
+    header = MAGIC + struct.pack(
+        "<11I", VERSION, meta.n, meta.k, meta.b, meta.code_bits, meta.words,
+        flags, meta.n_bands, meta.rows_per_band, meta.n_keys, meta.s)
+    header = header.ljust(HEADER_BYTES, b"\0")
+    offsets = _section_offsets(meta)
+    with open(out_path, "wb") as f:
+        f.write(header)
+        pos = HEADER_BYTES
+        for name, dtype, count in _sections(meta):
+            f.write(b"\0" * (offsets[name] - pos))
+            if name == "payload":
+                written = 0
+                for words in shard_words:          # stream off the mmaps
+                    chunk = np.ascontiguousarray(words, dtype)
+                    f.write(chunk.tobytes())
+                    written += chunk.size
+                assert written == count, (written, count)
+                pos = offsets[name] + 4 * written
+                continue
+            arr = np.ascontiguousarray(arrays[name], dtype)
+            assert arr.size == count, (name, arr.size, count)
+            f.write(arr.tobytes())
+            pos = offsets[name] + arr.nbytes
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# Load / query-side container
+# ---------------------------------------------------------------------------
+
+def read_index_meta(path: str) -> IndexMeta:
+    with open(path, "rb") as f:
+        head = f.read(HEADER_BYTES)
+    if len(head) < HEADER_BYTES or head[:4] != MAGIC:
+        raise ValueError(f"{path}: not a .idx index (bad magic)")
+    (version, n, k, b, code_bits, words, flags, n_bands, rows_per_band,
+     n_keys, s) = struct.unpack("<11I", head[4:48])
+    if version != VERSION:
+        raise ValueError(f"{path}: unsupported .idx version {version} "
+                         f"(this build reads version {VERSION})")
+    return IndexMeta(n=n, k=k, b=b, code_bits=code_bits, words=words,
+                     sentinel=bool(flags & _FLAG_SENTINEL),
+                     has_set_sizes=bool(flags & _FLAG_SET_SIZES),
+                     n_bands=n_bands, rows_per_band=rows_per_band,
+                     n_keys=n_keys, s=s)
+
+
+@dataclasses.dataclass
+class SigIndex:
+    """A loaded ``.idx``: mmap'd bucket tables + packed corpus payload.
+
+    ``words_host`` stays packed ((n, words) uint32 -- the host never
+    holds an unpacked corpus); ``corpus`` uploads it to the device once,
+    on first use, for kernel scoring.
+    """
+
+    meta: IndexMeta
+    labels: np.ndarray
+    set_sizes: Optional[np.ndarray]
+    band_offsets: np.ndarray
+    keys: np.ndarray
+    bucket_offsets: np.ndarray
+    postings: np.ndarray
+    words_host: np.ndarray
+    _corpus = None
+
+    @property
+    def spec(self) -> PackSpec:
+        return self.meta.spec
+
+    @property
+    def banding(self) -> BandingConfig:
+        return self.meta.banding
+
+    @property
+    def n(self) -> int:
+        return self.meta.n
+
+    @property
+    def corpus(self):
+        """Device-resident packed signature matrix (uploaded once)."""
+        if self._corpus is None:
+            self._corpus = jnp.asarray(np.ascontiguousarray(self.words_host))
+        return self._corpus
+
+    def bucket(self, band: int, key: int) -> np.ndarray:
+        """Posting list (ascending doc ids) for one (band, key) bucket."""
+        lo, hi = self.band_offsets[band], self.band_offsets[band + 1]
+        t = lo + np.searchsorted(self.keys[lo:hi], key)
+        if t == hi or self.keys[t] != key:
+            return np.zeros(0, np.uint32)
+        return self.postings[self.bucket_offsets[t]:self.bucket_offsets[t + 1]]
+
+    def candidates(self, query_keys: np.ndarray) -> np.ndarray:
+        """Union of posting lists over all bands for one query's keys."""
+        hits = [self.bucket(band, int(query_keys[band]))
+                for band in range(self.meta.n_bands)]
+        if not hits:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate(hits)).astype(np.int64)
+
+
+def load_index(path: str, *, mmap: bool = True) -> SigIndex:
+    """Read a ``.idx`` back; ``mmap=True`` serves straight off disk."""
+    meta = read_index_meta(path)
+    offsets = _section_offsets(meta)
+    out = {}
+    for name, dtype, count in _sections(meta):
+        if mmap:
+            out[name] = np.memmap(path, dtype, "r", offset=offsets[name],
+                                  shape=(count,))
+        else:
+            with open(path, "rb") as f:
+                f.seek(offsets[name])
+                arr = np.fromfile(f, dtype, count)
+            if arr.size != count:
+                raise OSError(f"{path}: truncated .idx section {name}")
+            out[name] = arr
+    return SigIndex(
+        meta=meta, labels=np.asarray(out["labels"]),
+        set_sizes=(np.asarray(out["set_sizes"])
+                   if meta.has_set_sizes else None),
+        band_offsets=np.asarray(out["band_offsets"]),
+        keys=np.asarray(out["keys"]),
+        bucket_offsets=np.asarray(out["bucket_offsets"]),
+        postings=np.asarray(out["postings"]),
+        words_host=out["payload"].reshape(meta.n, meta.words))

@@ -1,0 +1,280 @@
+"""Query paths over a loaded ``.idx``: exact top-k and LSH + rerank.
+
+One searcher, two serving paths sharing the scoring kernel and the
+estimator rerank:
+
+  * ``mode="exact"``  -- kernel brute force: the packed-Hamming kernel
+    (``repro.kernels.hamming.packed_match``) scores the query batch
+    against fixed-size corpus blocks of the device-resident packed
+    matrix, scores are debiased into resemblance estimates (Theorem 1),
+    and a running top-k merge keeps the best k per query.  Exact in the
+    sense of "exact over the signatures": the b-bit estimator itself is
+    still an estimator.
+  * ``mode="lsh"``    -- candidate generation through the banded bucket
+    tables (host-side binary search over the mmap'd sorted key arrays),
+    then one kernel launch over the batch's candidate union with
+    non-candidates masked out, then the same estimator rerank.  The
+    S-curve (``repro.index.banding``) predicts the recall/selectivity
+    trade the band config buys.
+
+Batched query admission: ``submit`` queues single queries, ``flush``
+runs them as one batch (one kernel launch, one candidate union) and
+returns per-ticket results -- the serving-launcher entry point
+(``repro.launch.serve --index``).
+
+Scores are resemblance estimates: the Li-Owen-Zhang normalization for
+sentinel wires (matches / (k - jointly_empty)) and the Theorem-1
+debiasing -- exact per-pair constants when the index stores set sizes
+and the universe size, the sparse-limit constants (C1 = C2 = 2^-b)
+otherwise.  Both debiasings are strictly monotone in the collision
+fraction, so rankings do not depend on which one applies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import bbit_constants
+from repro.index.banding import band_keys_packed
+from repro.index.builder import SigIndex
+from repro.kernels import PackedSignatures, packed_match
+
+
+def resemblance_scores(matches: jax.Array, both_empty: Optional[jax.Array],
+                       k: int, b: int, *,
+                       query_sizes: Optional[jax.Array] = None,
+                       doc_sizes: Optional[jax.Array] = None,
+                       D: int = 0) -> jax.Array:
+    """(Q, N) match counts -> (Q, N) float32 resemblance estimates.
+
+    ``both_empty`` applies the Li-Owen-Zhang denominator for sentinel
+    wires; the Theorem-1 debias uses exact (C1, C2) when per-document
+    set sizes and the universe size are known, the sparse-limit
+    constants 2^-b otherwise.
+    """
+    matches = matches.astype(jnp.float32)
+    if both_empty is not None:
+        denom = jnp.maximum(k - both_empty.astype(jnp.float32), 1.0)
+    else:
+        denom = jnp.float32(k)
+    p_hat = matches / denom
+    if query_sizes is not None and doc_sizes is not None and D:
+        c = bbit_constants(jnp.asarray(query_sizes)[:, None],
+                           jnp.asarray(doc_sizes)[None, :], D, b)
+        return (p_hat - c.C1) / (1.0 - c.C2)
+    c1 = jnp.float32(2.0 ** -b)
+    return (p_hat - c1) / (1.0 - c1)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Top-k per query: global doc ids (-1 past the candidate count) and
+    their resemblance estimates (-inf where the id is -1)."""
+
+    indices: np.ndarray          # (Q, topk) int64
+    scores: np.ndarray           # (Q, topk) float32
+    n_candidates: Optional[np.ndarray] = None    # (Q,) for the LSH path
+
+    def __len__(self) -> int:
+        return self.indices.shape[0]
+
+
+def _query_words(queries, spec) -> jax.Array:
+    if isinstance(queries, PackedSignatures):
+        if (queries.k, queries.b, queries.sentinel) != \
+                (spec.k, spec.b, spec.sentinel):
+            raise ValueError(
+                f"query wire (k={queries.k}, b={queries.b}, "
+                f"sentinel={queries.sentinel}) != index wire (k={spec.k}, "
+                f"b={spec.b}, sentinel={spec.sentinel})")
+        return queries.data
+    words = jnp.asarray(queries)
+    if words.ndim != 2 or words.shape[1] != spec.words:
+        raise ValueError(f"raw queries must be (Q, {spec.words}) uint32 "
+                         f"packed words, got {words.shape}")
+    return words
+
+
+class IndexSearcher:
+    """Serving front end over one ``SigIndex``.
+
+    ``backend`` picks the kernel execution (SignatureEngine registry);
+    ``corpus_block`` is the brute-force block height (fixed, so every
+    block reuses one compiled kernel); ``blocks`` overrides the
+    TuningTable kernel tile sizes.
+    """
+
+    def __init__(self, index: SigIndex, *, backend: Optional[str] = None,
+                 corpus_block: int = 4096, blocks: Optional[dict] = None):
+        self.index = index
+        self.backend = backend
+        self.blocks = blocks
+        self.corpus_block = min(corpus_block, max(index.n, 1))
+        self._pending: List[Tuple[int, jax.Array, Optional[int]]] = []
+        self._next_ticket = 0
+        self._query_sizes = None
+        self._corpus_padded = None
+        n_pad = ((index.n + self.corpus_block - 1)
+                 // self.corpus_block) * self.corpus_block
+        self._n_pad = n_pad
+
+    # -- scoring ---------------------------------------------------------
+    def _padded_corpus(self):
+        """Device corpus padded to a block multiple (computed once)."""
+        if self._corpus_padded is None:
+            corpus = self.index.corpus
+            if self._n_pad != corpus.shape[0]:
+                corpus = jnp.pad(
+                    corpus, ((0, self._n_pad - corpus.shape[0]), (0, 0)))
+            self._corpus_padded = corpus
+        return self._corpus_padded
+
+    def _score(self, qwords, cwords, doc_ids):
+        """Kernel match counts -> resemblance estimates for given docs."""
+        meta = self.index.meta
+        out = packed_match(qwords, cwords, self.index.spec,
+                           backend=self.backend, blocks=self.blocks)
+        matches, both_empty = out if meta.sentinel else (out, None)
+        sizes = self.index.set_sizes
+        if sizes is not None and meta.s:
+            doc_sizes = jnp.asarray(sizes)[doc_ids]
+            q_sizes = self._query_sizes
+            if q_sizes is None:
+                raise ValueError("index stores set sizes; pass query_sizes "
+                                 "to search() for the exact Theorem-1 rerank")
+            return resemblance_scores(matches, both_empty, meta.k, meta.b,
+                                      query_sizes=q_sizes,
+                                      doc_sizes=doc_sizes, D=1 << meta.s)
+        return resemblance_scores(matches, both_empty, meta.k, meta.b)
+
+    # -- exact brute force ----------------------------------------------
+    def _exact(self, qwords, topk: int) -> SearchResult:
+        n, q = self.index.n, qwords.shape[0]
+        kk = min(topk, n)
+        corpus = self._padded_corpus()
+        best_s = jnp.full((q, kk), -jnp.inf, jnp.float32)
+        best_i = jnp.full((q, kk), -1, jnp.int32)
+        for start in range(0, self._n_pad, self.corpus_block):
+            cblk = jax.lax.dynamic_slice_in_dim(corpus, start,
+                                                self.corpus_block, axis=0)
+            ids = start + jnp.arange(self.corpus_block, dtype=jnp.int32)
+            sc = self._score(qwords, cblk, ids)
+            sc = jnp.where(ids[None, :] < n, sc, -jnp.inf)
+            cat_s = jnp.concatenate([best_s, sc], axis=1)
+            cat_i = jnp.concatenate(
+                [best_i, jnp.broadcast_to(ids[None, :], sc.shape)], axis=1)
+            best_s, sel = jax.lax.top_k(cat_s, kk)
+            best_i = jnp.take_along_axis(cat_i, sel, axis=1)
+        # pad to the requested width so both modes return (Q, topk)
+        out_i = np.full((q, topk), -1, np.int64)
+        out_s = np.full((q, topk), -np.inf, np.float32)
+        out_i[:, :kk] = np.asarray(best_i)
+        out_s[:, :kk] = np.asarray(best_s)
+        return SearchResult(out_i, out_s)
+
+    # -- LSH candidates + rerank ----------------------------------------
+    def _lsh(self, qwords, topk: int) -> SearchResult:
+        q = qwords.shape[0]
+        meta = self.index.meta
+        qkeys = np.asarray(band_keys_packed(qwords, self.index.spec,
+                                            self.index.banding))
+        cand = [self.index.candidates(qkeys[i]) for i in range(q)]
+        n_cand = np.array([c.size for c in cand], np.int64)
+        union = (np.unique(np.concatenate(cand)) if any(c.size for c in cand)
+                 else np.zeros(0, np.int64))
+        if union.size == 0:
+            return SearchResult(np.full((q, topk), -1, np.int64),
+                                np.full((q, topk), -np.inf, np.float32),
+                                n_cand)
+        member = np.zeros((q, union.size), bool)
+        for i, c in enumerate(cand):
+            member[i, np.searchsorted(union, c)] = True
+        # pad the candidate union to a bucketed width so batch-to-batch
+        # candidate counts reuse compiled kernels
+        c_pad = max(128, 1 << int(union.size - 1).bit_length())
+        ids = np.zeros(c_pad, np.int32)
+        ids[:union.size] = union
+        mem = np.zeros((q, c_pad), bool)
+        mem[:, :union.size] = member
+        ids_dev = jnp.asarray(ids)
+        cwords = jnp.take(self.index.corpus, ids_dev, axis=0)
+        sc = self._score(qwords, cwords, ids_dev)
+        sc = jnp.where(jnp.asarray(mem), sc, -jnp.inf)
+        kk = min(topk, c_pad)
+        top_s, sel = jax.lax.top_k(sc, kk)
+        top_i = jnp.take(ids_dev, sel)
+        top_i = jnp.where(jnp.isneginf(top_s), -1, top_i)
+        out_i = np.full((q, topk), -1, np.int64)
+        out_s = np.full((q, topk), -np.inf, np.float32)
+        out_i[:, :kk] = np.asarray(top_i)
+        out_s[:, :kk] = np.asarray(top_s)
+        return SearchResult(out_i, out_s, n_cand)
+
+    # -- public API ------------------------------------------------------
+    def search(self, queries: Union[PackedSignatures, jax.Array,
+                                    np.ndarray], topk: int = 10, *,
+               mode: str = "exact",
+               query_sizes: Optional[np.ndarray] = None) -> SearchResult:
+        """Top-k most resembling documents for a batch of packed queries.
+
+        ``queries``: a ``PackedSignatures`` batch or a raw (Q, words)
+        uint32 array in the index's wire format.  ``mode``: ``"exact"``
+        (kernel brute force) or ``"lsh"`` (banded candidates + kernel
+        rerank).  ``query_sizes`` feeds the exact Theorem-1 debias when
+        the index stores set sizes.
+        """
+        if topk < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
+        qwords = _query_words(queries, self.index.spec)
+        self._query_sizes = (None if query_sizes is None
+                             else jnp.asarray(query_sizes))
+        if mode == "exact":
+            return self._exact(qwords, topk)
+        if mode == "lsh":
+            return self._lsh(qwords, topk)
+        raise ValueError(f"mode must be 'exact' or 'lsh', got {mode!r}")
+
+    # -- batched admission ----------------------------------------------
+    def submit(self, query: Union[PackedSignatures, jax.Array, np.ndarray],
+               *, query_size: Optional[int] = None) -> int:
+        """Queue one query (a single packed row); returns its ticket.
+
+        ``query_size`` (the query set's original nonzero count) feeds
+        the exact Theorem-1 rerank on indexes that store set sizes.
+        """
+        qwords = _query_words(
+            query if isinstance(query, PackedSignatures)
+            else jnp.asarray(query).reshape(1, -1), self.index.spec)
+        if qwords.shape[0] != 1:
+            raise ValueError("submit() takes exactly one query row")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, qwords, query_size))
+        return ticket
+
+    def flush(self, topk: int = 10, *, mode: str = "exact"
+              ) -> Dict[int, SearchResult]:
+        """Run all queued queries as ONE batch; per-ticket results."""
+        if not self._pending:
+            return {}
+        tickets = [t for t, _, _ in self._pending]
+        batch = jnp.concatenate([w for _, w, _ in self._pending], axis=0)
+        sizes = [sz for _, _, sz in self._pending]
+        self._pending = []
+        if any(sz is not None for sz in sizes):
+            if any(sz is None for sz in sizes):
+                raise ValueError("either every submitted query carries a "
+                                 "query_size or none does")
+            qsizes = np.asarray(sizes, np.uint32)
+        else:
+            qsizes = None
+        res = self.search(batch, topk, mode=mode, query_sizes=qsizes)
+        return {t: SearchResult(res.indices[i:i + 1], res.scores[i:i + 1],
+                                None if res.n_candidates is None
+                                else res.n_candidates[i:i + 1])
+                for i, t in enumerate(tickets)}

@@ -9,6 +9,9 @@
                  k bins (k x less hash work than minhash.py); fused
                  (b+1)-bit sentinel coding for the packed wire format.
   sigbag.py   -- Eq.(5) signature embedding-bag as one-hot MXU matmuls.
+  hamming.py  -- packed-signature match counting for retrieval: b-bit
+                 codes extracted in-register from the wire words,
+                 sentinel-EMPTY aware (the repro.index scoring hot path).
   pack.py     -- the packed b-bit wire format (PackSpec, device pack /
                  unpack epilogues, in-kernel pack_block).
   engine.py   -- SignaturePlan / SignatureEngine: backend registry
@@ -21,16 +24,18 @@ Only this package calls ``*_pallas`` builders; everything downstream goes
 through the engine (or the legacy wrappers it backs).
 """
 
-from repro.kernels.engine import (BACKENDS, Backend, PackedSignatures,
-                                  SignatureEngine, SignaturePlan, TuningTable,
+from repro.kernels.engine import (BACKENDS, HAMMING_BLOCKS, Backend,
+                                  PackedSignatures, SignatureEngine,
+                                  SignaturePlan, TuningTable,
                                   batch_signatures, default_tuning_table,
                                   minhash2u, minhash4u, oph2u, oph4u,
                                   register_backend, resolve_backend, sigbag)
+from repro.kernels.hamming import packed_match
 from repro.kernels.pack import PackSpec
 
 __all__ = [
-    "BACKENDS", "Backend", "PackSpec", "PackedSignatures", "SignatureEngine",
-    "SignaturePlan", "TuningTable", "batch_signatures",
+    "BACKENDS", "Backend", "HAMMING_BLOCKS", "PackSpec", "PackedSignatures",
+    "SignatureEngine", "SignaturePlan", "TuningTable", "batch_signatures",
     "default_tuning_table", "minhash2u", "minhash4u", "oph2u", "oph4u",
-    "register_backend", "resolve_backend", "sigbag",
+    "packed_match", "register_backend", "resolve_backend", "sigbag",
 ]

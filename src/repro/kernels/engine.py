@@ -105,6 +105,9 @@ def resolve_backend(name: Optional[str] = None) -> Backend:
 
 MINHASH_BLOCKS = {"blk_n": 8, "blk_t": 128, "blk_k": 128}
 OPH_BLOCKS = {"blk_n": 8, "blk_t": 128, "blk_k": 0}     # blk_k 0 = all-lane
+# retrieval scoring (kernels/hamming.py): query x corpus output tile +
+# codes per reduction step; table entries keyed on the packed word count
+HAMMING_BLOCKS = {"blk_q": 8, "blk_n": 128, "blk_k": 128}
 
 
 def nnz_bucket(nnz: int) -> int:
@@ -122,7 +125,9 @@ class TuningTable:
     fall back to the per-scheme defaults, so the table is always
     optional.  The scheme is part of the key because block conventions
     differ (``blk_k=0`` means "all bins in one lane block" for OPH but
-    is invalid for minhash).
+    is invalid for minhash).  The retrieval kernel registers as scheme
+    ``"hamming"`` with (blk_q, blk_n, blk_k) blocks keyed on the packed
+    word count instead of nnz (``repro.kernels.hamming.packed_match``).
     """
 
     def __init__(self, entries: Optional[dict] = None,

@@ -1,0 +1,204 @@
+"""Pallas TPU kernel for packed-signature match counting (retrieval).
+
+The search workload (paper §1's dedup/crawling pipeline; Li-Owen-Zhang,
+arXiv:1208.1259, "...for Efficient Search and Learning") scores a batch
+of query signatures against a corpus block: for every (query, doc) pair,
+how many of the k b-bit codes agree?  That count is the collision
+fraction P̂_b behind the Theorem-1 resemblance estimate, so this kernel
+is the entire scoring hot path of ``repro.index``.
+
+Both operands arrive in the packed wire format (``kernels/pack.py``:
+k codes of ``code_bits`` each, little-endian bitstream in uint32 words
+-- (b+1)-bit codes with EMPTY = 2^b for sentinel OPH).  The kernel never
+round-trips through an unpacked (n, k) matrix in HBM: each grid step
+DMA's a word tile, extracts its codes in-register, and accumulates match
+counts into the revisited (BLK_Q, BLK_N) output block.
+
+Grid = (Q/BLK_Q, N/BLK_N, k_pad/BLK_K) with the last axis accumulating
+(the same "parallel, parallel, arbitrary" reduction pattern as the
+signature kernels).  BLK_K must be a multiple of 32 so every code block
+starts on a word boundary and its words form a clean BlockSpec tile of
+BLK_K*code_bits/32 lanes.
+
+For sentinel OPH the kernel also counts jointly-EMPTY positions, so the
+caller can apply the Li-Owen-Zhang normalization
+N_match / (k - N_jointly_empty) without ever unpacking.
+
+Backend selection / block sizes come from the ``SignatureEngine``
+registry (``repro.kernels.engine``): the public wrapper ``packed_match``
+resolves a Backend (interpret / tpu run this kernel; gpu / ref run the
+``kernels/ref.py`` oracle) and looks up ``TuningTable`` entries under
+scheme ``"hamming"`` keyed on the packed word count.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bbit import packed_words
+from repro.kernels.minhash import _compiler_params
+from repro.kernels.pack import PackSpec
+
+_U32 = jnp.uint32
+
+
+def _extract_codes(words, code_bits: int, blk_k: int):
+    """(rows, BW) word tile -> (rows, BLK_K) uint32 codes, in-register.
+
+    The tile starts on a word boundary (BLK_K % 32 == 0 guarantees every
+    code block does), so local code i occupies bits
+    [i*code_bits, (i+1)*code_bits) of the tile's bitstream.  Same
+    two-shift word-straddle arithmetic as ``repro.core.bbit.unpack_codes``
+    (no undefined shift-by-32), traced here inside the kernel.
+    """
+    bw = words.shape[-1]
+    i = jnp.arange(blk_k, dtype=jnp.uint32)
+    bit0 = i * _U32(code_bits)
+    wlo = (bit0 >> 5).astype(jnp.int32)
+    sh = bit0 & _U32(31)
+    lo = jnp.take(words, wlo, axis=1) >> sh
+    hi = (jnp.take(words, jnp.minimum(wlo + 1, bw - 1), axis=1)
+          << (_U32(31) - sh)) << _U32(1)
+    out = lo | hi
+    if code_bits < 32:
+        out = out & _U32((1 << code_bits) - 1)
+    return out
+
+
+def _hamming_kernel(q_ref, c_ref, match_ref, *empty_refs, k: int,
+                    code_bits: int, blk_k: int, sentinel: bool):
+    t_step = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        match_ref[...] = jnp.zeros_like(match_ref)
+        if sentinel:
+            empty_refs[0][...] = jnp.zeros_like(empty_refs[0])
+
+    qc = _extract_codes(q_ref[...], code_bits, blk_k)      # (BLK_Q, BLK_K)
+    cc = _extract_codes(c_ref[...], code_bits, blk_k)      # (BLK_N, BLK_K)
+    # global code index: padding codes past k never count
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk_k), 2)
+             + t_step * blk_k) < k
+    eq = (qc[:, None, :] == cc[None, :, :]) & valid
+    if sentinel:
+        ec = _U32(1 << (code_bits - 1))                    # EMPTY = 2^b
+        both = ((qc == ec)[:, None, :] & (cc == ec)[None, :, :]) & valid
+        eq = eq & ~both
+        empty_refs[0][...] = (empty_refs[0][...]
+                              + jnp.sum(both.astype(jnp.int32), axis=2))
+    match_ref[...] = match_ref[...] + jnp.sum(eq.astype(jnp.int32), axis=2)
+
+
+def packed_match_pallas(qwords: jax.Array, cwords: jax.Array, *, k: int,
+                        code_bits: int, sentinel: bool = False,
+                        blk_q: int = 8, blk_n: int = 128, blk_k: int = 128,
+                        interpret: bool = True):
+    """Match counts between packed query and corpus signatures.
+
+    Args:
+      qwords: (Q, W) uint32 packed query signatures.
+      cwords: (N, W) uint32 packed corpus signatures (same wire format).
+      k, code_bits, sentinel: the wire format (``PackSpec``).
+      blk_q, blk_n: output tile; blk_k: codes per reduction step
+        (must be a multiple of 32 so word tiles align).
+
+    Q, N and W must tile (pad in the caller: zero words decode to code 0
+    but the in-kernel ``valid`` mask keeps codes past k out of every
+    count; padded *rows* produce garbage counts the caller slices off).
+
+    Returns (Q, N) int32 match counts; for ``sentinel=True`` a tuple
+    ``(matches, both_empty)`` where matches already excludes jointly-EMPTY
+    positions (the Li-Owen-Zhang numerator) and both_empty counts them
+    (the denominator correction).
+    """
+    if blk_k % 32:
+        raise ValueError(f"blk_k must be a multiple of 32 so code blocks "
+                         f"align to word boundaries, got {blk_k}")
+    q, w = qwords.shape
+    n, wc = cwords.shape
+    if wc != w:
+        raise ValueError(f"query words {w} != corpus words {wc}")
+    bw = blk_k * code_bits // 32
+    if q % blk_q or n % blk_n or w % bw:
+        raise ValueError(f"shapes must tile: Q={q}%{blk_q}, N={n}%{blk_n}, "
+                         f"W={w}%{bw} (= blk_k*code_bits/32)")
+    grid = (q // blk_q, n // blk_n, w // bw)
+    q_spec = pl.BlockSpec((blk_q, bw), lambda i, j, t: (i, t))
+    c_spec = pl.BlockSpec((blk_n, bw), lambda i, j, t: (j, t))
+    out_spec = pl.BlockSpec((blk_q, blk_n), lambda i, j, t: (i, j))
+    out_shape = jax.ShapeDtypeStruct((q, n), jnp.int32)
+    kern = functools.partial(_hamming_kernel, k=k, code_bits=code_bits,
+                             blk_k=blk_k, sentinel=sentinel)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, c_spec],
+        out_specs=[out_spec, out_spec] if sentinel else out_spec,
+        out_shape=[out_shape, out_shape] if sentinel else out_shape,
+        interpret=interpret,
+        **_compiler_params(interpret),
+    )(qwords, cwords)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "code_bits", "sentinel",
+                                             "backend", "blk_q", "blk_n",
+                                             "blk_k"))
+def _packed_match_run(qwords, cwords, *, k, code_bits, sentinel, backend,
+                      blk_q, blk_n, blk_k):
+    from repro.kernels import ref as kref
+    from repro.kernels.engine import BACKENDS, _pad_axis
+    q, n = qwords.shape[0], cwords.shape[0]
+    be = BACKENDS[backend]
+    if not be.use_pallas:
+        return kref.packed_match_ref(qwords, cwords, k=k,
+                                     code_bits=code_bits, sentinel=sentinel)
+    bw = blk_k * code_bits // 32
+    qp = _pad_axis(_pad_axis(qwords, blk_q, 0), bw, 1)
+    cp = _pad_axis(_pad_axis(cwords, blk_n, 0), bw, 1)
+    out = packed_match_pallas(qp, cp, k=k, code_bits=code_bits,
+                              sentinel=sentinel, blk_q=blk_q, blk_n=blk_n,
+                              blk_k=blk_k, interpret=be.interpret)
+    if sentinel:
+        return out[0][:q, :n], out[1][:q, :n]
+    return out[:q, :n]
+
+
+def packed_match(qwords: jax.Array, cwords: jax.Array, spec: PackSpec, *,
+                 backend: Optional[str] = None, blocks: Optional[dict] = None,
+                 tuning=None) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Match counts between packed signature batches (the query hot path).
+
+    ``spec`` is the shared wire format; ``backend`` resolves through the
+    ``SignatureEngine`` registry ("auto" per hardware; interpret/tpu run
+    the Pallas kernel, gpu/ref the jnp oracle).  Block sizes come from
+    explicit ``blocks`` > ``TuningTable`` entry (scheme ``"hamming"``,
+    keyed on the packed word count) > ``HAMMING_BLOCKS`` defaults.
+
+    Returns (Q, N) int32 matches, or ``(matches, both_empty)`` for
+    sentinel wires (see ``packed_match_pallas``).
+    """
+    from repro.kernels.engine import (HAMMING_BLOCKS, default_tuning_table,
+                                      resolve_backend)
+    words = packed_words(spec.k, spec.code_bits)
+    if qwords.shape[-1] != words or cwords.shape[-1] != words:
+        raise ValueError(
+            f"packed operands have {qwords.shape[-1]}/{cwords.shape[-1]} "
+            f"words, spec (k={spec.k}, code_bits={spec.code_bits}) "
+            f"needs {words}")
+    be = resolve_backend(backend)
+    if not blocks:
+        table = tuning or default_tuning_table()
+        blocks = (table.lookup(be.name, "hamming", spec.k, words)
+                  or dict(HAMMING_BLOCKS))
+    return _packed_match_run(qwords, cwords, k=spec.k,
+                             code_bits=spec.code_bits, sentinel=spec.sentinel,
+                             backend=be.name, blk_q=blocks["blk_q"],
+                             blk_n=blocks["blk_n"], blk_k=blocks["blk_k"])

@@ -83,3 +83,23 @@ def sigbag_ref(tokens: jax.Array, table: jax.Array) -> jax.Array:
         axis=2,
     )[:, :, 0, :]
     return jnp.sum(gathered.astype(jnp.float32), axis=1).astype(table.dtype)
+
+
+def packed_match_ref(qwords: jax.Array, cwords: jax.Array, *, k: int,
+                     code_bits: int, sentinel: bool = False):
+    """Oracle for ``packed_match_pallas``: unpack (on device) + compare.
+
+    Returns (Q, N) int32 match counts; sentinel wires additionally return
+    the jointly-EMPTY counts: ``(matches, both_empty)`` with matches
+    excluding jointly-EMPTY positions (Li-Owen-Zhang numerator).
+    """
+    from repro.core.bbit import unpack_codes
+    qc = unpack_codes(qwords, code_bits, k)            # (Q, k)
+    cc = unpack_codes(cwords, code_bits, k)            # (N, k)
+    eq = qc[:, None, :] == cc[None, :, :]
+    if sentinel:
+        ec = jnp.uint32(1 << (code_bits - 1))
+        both = (qc == ec)[:, None, :] & (cc == ec)[None, :, :]
+        matches = jnp.sum((eq & ~both).astype(jnp.int32), axis=2)
+        return matches, jnp.sum(both.astype(jnp.int32), axis=2)
+    return jnp.sum(eq.astype(jnp.int32), axis=2)

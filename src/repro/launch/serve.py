@@ -1,35 +1,119 @@
-"""Serving launcher: batched decode (LMs) or batched scoring (recsys).
+"""Serving launcher: batched decode (LMs), batched scoring (recsys), or
+similarity-search serving over a packed signature index.
 
     PYTHONPATH=src python -m repro.launch.serve --arch <id> [--smoke]
         [--tokens N | --requests N]
+    PYTHONPATH=src python -m repro.launch.serve --index [--mode exact|lsh]
+        [--docs N] [--queries N] [--topk K] [--densify d]
 
 LMs run the KV-cache serve_step autoregressively for --tokens steps on a
 batch of prompts; recsys archs score --requests synthetic requests through
 ``serve_scores`` (including the minhash-frontend featurization, i.e. the
-paper's online-preprocessing path).
+paper's online-preprocessing path).  ``--index`` drives the retrieval
+workload (``repro.index``): shard a synthetic corpus, hash it to packed
+``.sig`` shards, build the banded ``.idx``, then serve batched top-k
+queries through the packed-Hamming kernel, reporting p50/p99 latency.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
+import os
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_arch
-from repro.launch.steps import build_cell, init_inputs
 from repro.sharding.rules import set_mesh
+
+
+def serve_index(args) -> None:
+    """The retrieval workload: build a .idx, serve batched queries."""
+    import numpy as np
+
+    from repro.data.pipeline import make_sharded_dataset
+    from repro.data.preprocess import preprocess_shards
+    from repro.data.synthetic import DatasetSpec
+    from repro.index import (IndexSearcher, build_index, choose_band_config,
+                             load_index)
+    from repro.train.online import make_family
+
+    k, b, s = args.k, args.b, 16
+    spec = DatasetSpec("serve_index", n=args.docs, D=1 << s,
+                       avg_nnz=64, n_prototypes=8, overlap=0.8, seed=0)
+    with tempfile.TemporaryDirectory(prefix="repro_serve_index_") as tmp:
+        raw = make_sharded_dataset(spec, os.path.join(tmp, "raw"),
+                                   n_shards=4)
+        fam = make_family(jax.random.PRNGKey(0), args.scheme, k, s,
+                          densify=args.densify)
+        t0 = time.perf_counter()
+        preprocess_shards(raw, os.path.join(tmp, "sig"), fam, b=b,
+                          chunk_size=max(64, args.docs // 4),
+                          loader_kwargs={"lane_multiple": 8})
+        t_hash = time.perf_counter() - t0
+        sig_paths = sorted(glob.glob(os.path.join(tmp, "sig", "*.sig")))
+        cfg = choose_band_config(
+            k, b, code_bits=(b + 1 if args.densify == "sentinel" else b),
+            threshold=args.threshold)
+        t0 = time.perf_counter()
+        meta = build_index(sig_paths, os.path.join(tmp, "corpus.idx"), cfg)
+        t_build = time.perf_counter() - t0
+        index = load_index(os.path.join(tmp, "corpus.idx"))
+        searcher = IndexSearcher(index)
+        print(f"indexed {meta.n} docs (k={k} b={b} "
+              f"bands={cfg.n_bands}x{cfg.rows_per_band}): "
+              f"hash {t_hash:.2f}s, build {t_build:.2f}s, "
+              f"payload {meta.payload_bytes:,} B")
+        rng = np.random.default_rng(1)
+        lat = []
+        hits0 = None
+        for r in range(args.requests):
+            picks = rng.integers(0, meta.n, args.queries)
+            for i in picks:
+                searcher.submit(np.asarray(index.words_host[int(i)]))
+            t0 = time.perf_counter()
+            out = searcher.flush(args.topk, mode=args.mode)
+            lat.append((time.perf_counter() - t0) * 1e3)
+            if hits0 is None:
+                hits0 = np.mean([float(res.indices[0, 0] == q)
+                                 for res, q in zip(out.values(), picks)])
+        lat = sorted(lat)
+        qps = args.queries * args.requests / (sum(lat) / 1e3)
+        print(f"{args.requests} batches x {args.queries} queries "
+              f"({args.mode}): p50={lat[len(lat) // 2]:.1f}ms "
+              f"max={lat[-1]:.1f}ms {qps:.0f} q/s "
+              f"self-hit@1={hits0:.2f}")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--index", action="store_true",
+                    help="serve the similarity-search index workload")
+    ap.add_argument("--mode", choices=("exact", "lsh"), default="lsh")
+    ap.add_argument("--docs", type=int, default=2048)
+    ap.add_argument("--queries", type=int, default=16,
+                    help="queries admitted per batch (--index)")
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--k", type=int, default=128)
+    ap.add_argument("--b", type=int, default=8)
+    ap.add_argument("--scheme", default="oph")
+    ap.add_argument("--densify", default="rotation")
+    ap.add_argument("--threshold", type=float, default=0.5)
     args = ap.parse_args()
 
+    if args.index:
+        serve_index(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --index is given")
+    from repro.configs import get_arch
+    from repro.launch.steps import build_cell, init_inputs
     spec = get_arch(args.arch)
     if spec.family == "lm":
         prog = build_cell(args.arch, "decode_32k", smoke=args.smoke)

@@ -76,8 +76,9 @@ def make_family(key: jax.Array, scheme: str, k: int, s: int, *,
     k bins).  ``densify`` applies to the OPH schemes only: ``"rotation"``
     (Shrivastava-Li 2014, signatures behave like minhash), ``"optimal"``
     (Shrivastava 2017 probe-sequence densification, lower estimator
-    variance) or ``"sentinel"`` (empty bins stay EMPTY; the learning
-    layer zero-codes them).
+    variance), ``"fast"`` (Mai et al. 2020 donor-broadcast densification,
+    O(k log k) fill work) or ``"sentinel"`` (empty bins stay EMPTY; the
+    learning layer zero-codes them).
     """
     if scheme == "2u":
         return Hash2U.create(key, k, s, variant=variant)
@@ -141,9 +142,10 @@ class SignatureCache:
 
     Lifecycle: ``max_cache_bytes`` caps the shard footprint -- chunks
     past the budget are not written and get re-hashed during replay
-    (``stats.uncached_chunks``; a budget-truncated cache re-reads the
-    raw shards on replay because chunk boundaries cut across them, so
-    size the budget to fit the full cache when replay I/O matters).  ``close()`` (or context-manager exit)
+    (``stats.uncached_chunks``); the tail read resumes at the first
+    uncached chunk's shard offset, recorded at populate time via
+    ``ChunkedLoader.resume_point``, so the cached prefix's raw shards
+    are never re-read.  ``close()`` (or context-manager exit)
     deletes the shards, and removes the cache dir entirely when this
     cache created it (``tempfile.mkdtemp``); a ``weakref.finalize``
     backstop covers caches that are garbage-collected unclosed, so temp
@@ -169,6 +171,7 @@ class SignatureCache:
         self.populated = False
         self.closed = False
         self.paths: List[str] = []
+        self._tail_resume = None      # (shard idx, skip) past the budget
         self.stats = CacheStats()
         self.replay_stats = LoaderStats()
         self._finalizer = (weakref.finalize(self, shutil.rmtree,
@@ -202,6 +205,7 @@ class SignatureCache:
                 pass
         self.paths = []
         self.populated = False
+        self._tail_resume = None
         self.stats = CacheStats()
 
     def close(self) -> None:
@@ -269,6 +273,12 @@ class SignatureCache:
             yield sig, labels
         self.stats.bytes_original = (self.stream.loader.stats.bytes_read
                                      - raw_bytes_before)
+        if self.stats.uncached_chunks:
+            # every cached chunk is full-size (a later chunk exists), so
+            # the first uncached chunk starts at this stream offset; the
+            # loader maps it to (shard, in-shard skip) for the replay tail
+            self._tail_resume = self.stream.loader.resume_point(
+                len(self.paths) * self.stream.loader.chunk_size)
         self.populated = True
 
     # -- epochs >= 1: replay packed shards -----------------------------
@@ -297,17 +307,14 @@ class SignatureCache:
         for payload in prefetch_iter(chunks, self.prefetch):
             yield self._decode(payload)
         if self.stats.uncached_chunks:
-            # budget-evicted tail: re-hash the chunks past the cached
-            # prefix.  Chunk boundaries cut across raw shards, so the
-            # loader re-reads AND re-parses the whole raw set each
-            # replay epoch (bytes_read reflects that); only the tail
-            # pays the hash kernel.  Starting the read at the first
-            # uncached chunk's shard offset is a tracked follow-up
-            # (ROADMAP) -- size max_cache_bytes to fit the full cache
-            # when replay I/O dominates.
-            for i, chunk in enumerate(self.stream.loader):
-                if i >= len(self.paths):
-                    yield self.stream.hash_chunk(chunk)
+            # budget-evicted tail: re-hash only the chunks past the
+            # cached prefix.  Populate recorded the first uncached
+            # chunk's (shard, in-shard offset), so the tail read starts
+            # there -- the cached prefix's raw shards are never re-read
+            # (bytes_read counts only the tail shards).
+            start_shard, skip = self._tail_resume
+            for chunk in self.stream.loader.iter_from(start_shard, skip):
+                yield self.stream.hash_chunk(chunk)
 
 
 # ---------------------------------------------------------------------------

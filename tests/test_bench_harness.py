@@ -1,0 +1,60 @@
+"""benchmarks/run.py harness semantics: failures must fail the process.
+
+The slow CI tier leans on the harness exit code, so a raising benchmark
+module (or a selector that matches nothing) must not exit 0 with a
+clean-looking summary.
+"""
+
+import sys
+
+import pytest
+
+import benchmarks.run as bench_run
+
+
+def _run_with(monkeypatch, modules, argv):
+    monkeypatch.setattr(bench_run, "MODULES", modules)
+    monkeypatch.setattr(sys, "argv", ["benchmarks.run"] + argv)
+
+
+def test_raising_module_exits_nonzero(monkeypatch, capsys, tmp_path):
+    """A module whose run() raises turns into exit code 1, with the
+    healthy modules' rows still printed."""
+    import types
+    good = types.ModuleType("benchmarks.fake_good")
+    good.run = lambda: [("good/row", 1.0, {"ok": 1})]
+    bad = types.ModuleType("benchmarks.fake_bad")
+
+    def _boom():
+        raise RuntimeError("benchmark exploded")
+    bad.run = _boom
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_good", good)
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_bad", bad)
+    _run_with(monkeypatch, [("fake_good", "x"), ("fake_bad", "y")], [])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 1
+    out, err = capsys.readouterr()
+    assert "good/row" in out
+    assert "fake_bad FAILED" in err and "FAILURES" in err
+
+
+def test_empty_selection_exits_nonzero(monkeypatch, capsys):
+    """A substring --only matching nothing must not look like success."""
+    _run_with(monkeypatch, list(bench_run.MODULES),
+              ["--only", "no_such_benchmark"])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 2
+    assert "selected no modules" in capsys.readouterr().err
+
+
+def test_unknown_exact_name_errors(monkeypatch):
+    _run_with(monkeypatch, list(bench_run.MODULES),
+              ["--only", "search_index,definitely_not_real"])
+    with pytest.raises(SystemExit):
+        bench_run.main()
+
+
+def test_search_index_registered():
+    assert any(name == "search_index" for name, _ in bench_run.MODULES)

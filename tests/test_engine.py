@@ -104,7 +104,7 @@ _GRID = [("minhash", fam, None, b)
          for fam in ("2u", "4u") for b in (0, 8)] + \
         [("oph", fam, densify, b)
          for fam in ("2u", "4u")
-         for densify in ("rotation", "sentinel", "optimal")
+         for densify in ("rotation", "sentinel", "optimal", "fast")
          for b in (0, 8)]
 # fast tier: every b=8 row (all schemes/densify modes) + the minhash-2u
 # baseline; the full product (b=0 rows, 4u duplicates) runs in the slow tier
@@ -115,7 +115,9 @@ _GRID = [pytest.param(*row, marks=[] if (row[3] == 8 or
 
 
 def _make_family(scheme, fam, densify, k, s):
-    key = jax.random.PRNGKey(hash((scheme, fam, densify)) % (2**31))
+    import zlib
+    key = jax.random.PRNGKey(
+        zlib.crc32(repr((scheme, fam, densify)).encode()) % (2**31))
     if scheme == "minhash":
         return (Hash2U.create(key, k, s) if fam == "2u"
                 else Hash4U.create(key, k, s))
@@ -232,6 +234,25 @@ def test_tuning_table_persistence(tmp_path, batch16):
     assert explicit.plan_for(999).blk_n == 8            # explicit wins
 
 
+def test_hamming_scheme_tuning_table_steers_kernel(batch16):
+    """The retrieval kernel resolves 'hamming' TuningTable entries (keyed
+    on the packed word count) and stays bit-exact under odd blocks."""
+    from repro.kernels import packed_match
+    fam = Hash2U.create(jax.random.PRNGKey(4), 128, 16)
+    wire = SignatureEngine(fam, b=8, packed=True).packed_signatures(batch16)
+    want = np.asarray(packed_match(wire.data, wire.data, wire.spec,
+                                   backend="interpret"))
+    tuned = TuningTable()
+    words = wire.data.shape[1]
+    tuned.record("interpret", "hamming", 128, words,
+                 {"blk_q": 4, "blk_n": 64, "blk_k": 32})
+    got = np.asarray(packed_match(wire.data, wire.data, wire.spec,
+                                  backend="interpret", tuning=tuned))
+    assert np.array_equal(got, want)
+    assert tuned.lookup("interpret", "hamming", 128, words) == \
+        {"blk_q": 4, "blk_n": 64, "blk_k": 32}
+
+
 # ---------------------------------------------------------------------------
 # .sig shard format + layering
 # ---------------------------------------------------------------------------
@@ -258,6 +279,26 @@ def test_sig_shard_roundtrip(tmp_path, mmap):
         with open(bad, "wb") as f:
             f.write(b"NOPE" + b"\0" * 60)
         read_sig_meta(bad)
+
+
+def test_sig_shard_version_byte_roundtrip_and_mismatch(tmp_path):
+    """The header's version byte survives a write/read round trip, and a
+    bumped version fails loudly (clear error naming both versions)."""
+    from repro.data.sigshard import VERSION, read_sig_meta, write_sig_shard
+    path = str(tmp_path / "v.sig")
+    words = np.arange(12, dtype=np.uint32).reshape(3, 4)
+    write_sig_shard(path, words, np.zeros(3, np.float32), k=16, b=8,
+                    code_bits=8)
+    with open(path, "rb") as f:
+        blob = bytearray(f.read())
+    assert blob[4] == VERSION                            # little-endian u32
+    read_sig_meta(path)                                  # current version ok
+    blob[4] = VERSION + 41
+    with open(path, "wb") as f:
+        f.write(blob)
+    with pytest.raises(ValueError, match=rf"version {VERSION + 41}.*"
+                                         rf"reads version {VERSION}"):
+        read_sig_meta(path)
 
 
 def test_no_pallas_builders_outside_kernels():

@@ -275,3 +275,55 @@ def test_sentinel_zero_coding_margin():
     scale = 1.0 / np.sqrt(k)
     expected = full - scale * np.asarray(w)[3 * (1 << b) + sig[:, 3]]
     np.testing.assert_allclose(part, expected, rtol=1e-5, atol=1e-6)
+
+
+def test_cache_budget_replay_skips_cached_prefix_io(shard_paths, tmp_path):
+    """A budget-truncated cache must NOT re-read the raw shards behind
+    the cached prefix on replay: the tail read resumes at the first
+    uncached chunk's shard offset recorded at populate time."""
+    import os
+
+    fam = make_family(jax.random.PRNGKey(6), "oph", K, D_BITS)
+    shard_bytes = [os.path.getsize(p) for p in shard_paths]
+    # TINY's train split shards as 3 x 68 examples: chunk_size 136 makes
+    # chunk 0 cover shards 0-1 exactly
+    fresh = [(np.asarray(s), np.asarray(y))
+             for s, y in SignatureStream(shard_paths, fam, b=B,
+                                         chunk_size=136)]
+    assert len(fresh) == 2
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=136),
+        cache_dir=str(tmp_path), max_cache_bytes=1)   # only chunk 0 fits
+    for _ in cache:
+        pass
+    assert cache.stats.uncached_chunks == 1
+    assert cache._tail_resume == (2, 0)               # tail = last shard
+    raw_before = cache.stream.loader.stats.bytes_read
+    replay = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    raw_replayed = cache.stream.loader.stats.bytes_read - raw_before
+    assert raw_replayed == shard_bytes[2]             # prefix never re-read
+    assert raw_replayed < sum(shard_bytes)
+    assert len(replay) == len(fresh)
+    for (s0, y0), (s1, y1) in zip(replay, fresh):
+        np.testing.assert_array_equal(s0, s1)
+        np.testing.assert_array_equal(y0, y1)
+
+
+def test_cache_budget_replay_resumes_mid_shard(shard_paths, tmp_path):
+    """Chunk boundaries that cut across a shard resume with an in-shard
+    skip and stay bit-exact (chunk_size 48 vs 64-example shards)."""
+    fam = make_family(jax.random.PRNGKey(2), "2u", K, D_BITS)
+    fresh = [(np.asarray(s), np.asarray(y))
+             for s, y in SignatureStream(shard_paths, fam, b=B,
+                                         chunk_size=48)]
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=48),
+        cache_dir=str(tmp_path), max_cache_bytes=1)
+    for _ in cache:
+        pass
+    assert cache._tail_resume == (0, 48)              # mid-shard resume
+    replay = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    assert len(replay) == len(fresh) > 2
+    for (s0, y0), (s1, y1) in zip(replay, fresh):
+        np.testing.assert_array_equal(s0, s1)
+        np.testing.assert_array_equal(y0, y1)

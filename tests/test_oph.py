@@ -19,9 +19,9 @@ import pytest
 from repro.core.estimator import estimate_resemblance_oph
 from repro.core.hashing import Hash2U, Hash4U, PermutationFamily, \
     family_storage_bytes
-from repro.core.oph import (EMPTY, OPH, densify_optimal, densify_rotation,
-                            hash_evaluations, oph_match_fraction,
-                            oph_signatures, split_hash)
+from repro.core.oph import (EMPTY, OPH, densify_fast, densify_optimal,
+                            densify_rotation, hash_evaluations,
+                            oph_match_fraction, oph_signatures, split_hash)
 from repro.data import word_pair_sets
 from repro.data.sparse import from_lists
 from repro.kernels import batch_signatures, oph2u, oph4u
@@ -94,6 +94,44 @@ def test_oph_optimal_densify_kernel_parity(family, b, batch16):
     want = oph_signatures(batch16.indices, batch16.mask, oph, b=b)
     got = batch_signatures(batch16, oph, b=b)
     assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("family,b", [
+    ("2u", 0), ("2u", 8),
+    pytest.param("4u", 4, marks=pytest.mark.slow),
+    pytest.param("4u", 1, marks=pytest.mark.slow),
+])
+def test_oph_fast_densify_kernel_parity(family, b, batch16):
+    """Mai-et-al fast densification: engine epilogue == reference."""
+    s, k = 16, 128
+    oph = OPH.create(jax.random.PRNGKey(b + 29), k, s, family, "fast")
+    want = oph_signatures(batch16.indices, batch16.mask, oph, b=b)
+    got = batch_signatures(batch16, oph, b=b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_densify_fast_properties():
+    """Genuine bins untouched; empty bins copy a genuine same-row donor;
+    all-empty rows stay EMPTY; matched holes receive matched donors
+    (the probe walk depends only on (bin, round, k))."""
+    s, k = 12, 64
+    oph = OPH.create(jax.random.PRNGKey(5), k, s, "2u", "sentinel")
+    batch = _random_batch(6, 40, s, seed=9)      # sparse: many empty bins
+    sent = np.asarray(oph_signatures(batch.indices, batch.mask, oph))
+    dense = np.asarray(densify_fast(jnp.asarray(sent)))
+    holes = sent == _E
+    assert holes.any() and not (dense == _E).any()
+    assert np.array_equal(dense[~holes], sent[~holes])
+    for i in range(sent.shape[0]):
+        genuine = set(sent[i][~holes[i]].tolist())
+        assert all(v in genuine for v in dense[i][holes[i]].tolist())
+    all_empty = np.full((2, k), _E, np.uint32)
+    assert (np.asarray(densify_fast(jnp.asarray(all_empty))) == _E).all()
+    # two rows with identical occupancy patterns walk identical donors
+    row = sent[0:1]
+    twin = np.concatenate([row, row])
+    out = np.asarray(densify_fast(jnp.asarray(twin)))
+    assert np.array_equal(out[0], out[1])
 
 
 def test_densify_optimal_properties():
@@ -277,6 +315,7 @@ def test_oph_create_validation():
         OPH(base=Hash2U.create(key, 4, 16), k=16)   # base.k != 1
     with pytest.raises(ValueError):
         OPH.create(key, 16, 16, densify="bogus")
+    assert OPH.create(key, 16, 16, densify="fast").densify == "fast"
 
 
 def test_oph_storage_and_cost_accounting():
@@ -299,10 +338,11 @@ def test_oph_storage_and_cost_accounting():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("densify,R", [
-    ("sentinel", 0.2), ("rotation", 0.7), ("optimal", 0.2),
+    ("sentinel", 0.2), ("rotation", 0.7), ("optimal", 0.2), ("fast", 0.7),
     pytest.param("sentinel", 0.7, marks=pytest.mark.slow),
     pytest.param("rotation", 0.2, marks=pytest.mark.slow),
     pytest.param("optimal", 0.7, marks=pytest.mark.slow),
+    pytest.param("fast", 0.2, marks=pytest.mark.slow),
 ])
 def test_oph_estimator_unbiased(densify, R):
     """Mean OPH estimate over seeds within 4 s.e. of the true Jaccard.
