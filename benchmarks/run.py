@@ -1,16 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME...]]
+            [--repeat N] [--json PATH]
 Prints ``name,us_per_call,derived`` CSV (one line per measurement).
 
 ``--only`` with a single token is a substring filter (legacy behaviour);
 a comma-separated list selects exact module names and errors on unknown
-ones (no more silently matching nothing on a typo).
+ones (no more silently matching nothing on a typo).  ``--repeat N`` runs
+each selected module N times and reports the per-row MEDIAN wall-clock
+(plus min/max spread), so scaling numbers stop being single-sample
+noise; ``--json PATH`` writes the final rows as a JSON artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -31,6 +36,8 @@ MODULES = [
     ("resemblance_mse", "Figs 20-22 / App. A"),
     ("signature_engine", "§6 / Table 2 wire format"),
     ("search_index", "§1 search workload (repro.index)"),
+    ("search_scaling", "serving scale-out (fused scan, shards, "
+                       "out-of-core)"),
 ]
 
 
@@ -49,12 +56,47 @@ def _selector(only):
     return lambda name: tokens[0] in name
 
 
+def _median_merge(runs):
+    """Per-row median wall-clock over aligned repeat runs.
+
+    Rows align by position and name (every module emits a deterministic
+    row list); the derived dict comes from the median run, annotated
+    with the repeat count and the min/max spread.
+    """
+    if len(runs) == 1:
+        return runs[0]
+    if any(len(r) != len(runs[0]) or
+           [name for name, _, _ in r] != [name for name, _, _ in runs[0]]
+           for r in runs[1:]):
+        # misaligned rows (a module emitted differently across repeats):
+        # fall back to the last run rather than mismatching medians
+        return runs[-1]
+    merged = []
+    for j, (name, _, _) in enumerate(runs[0]):
+        order = sorted(range(len(runs)), key=lambda i: runs[i][j][1])
+        mid = order[len(order) // 2]
+        us = runs[mid][j][1]
+        derived = dict(runs[mid][j][2])
+        derived.update(repeat=len(runs),
+                       us_min=round(runs[order[0]][j][1], 3),
+                       us_max=round(runs[order[-1]][j][1], 3))
+        merged.append((name, us, derived))
+    return merged
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter, or comma-separated exact "
                          "module names")
+    ap.add_argument("--repeat", type=int, default=1, metavar="N",
+                    help="run each selected module N times; report the "
+                         "per-row median wall-clock")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the final rows as a JSON artifact")
     args = ap.parse_args()
+    if args.repeat < 1:
+        ap.error("--repeat must be >= 1")
     selected = _selector(args.only)
 
     all_rows = []
@@ -67,16 +109,23 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            rows = mod.run()
+            rows = _median_merge([mod.run() for _ in range(args.repeat)])
             all_rows.extend(rows)
             dt = time.perf_counter() - t0
             print(f"# {mod_name} ({paper_ref}): {len(rows)} rows "
-                  f"in {dt:.1f}s", file=sys.stderr)
+                  f"in {dt:.1f}s"
+                  + (f" ({args.repeat} repeats, median reported)"
+                     if args.repeat > 1 else ""), file=sys.stderr)
         except Exception:
             failures.append(mod_name)
             print(f"# {mod_name} FAILED:", file=sys.stderr)
             traceback.print_exc()
     print(fmt_rows(all_rows))
+    if args.json and not failures:
+        doc = [{"name": name, "us_per_call": us, **derived}
+               for name, us, derived in all_rows]
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
     if not ran:
         # a substring --only matching nothing must not look like success
         print(f"# --only {args.only!r} selected no modules; available: "

@@ -194,6 +194,25 @@ def prefetch_iter(make_iter, prefetch: int):
         t.join()
 
 
+def device_put_iter(make_host_iter, prefetch: int = 2):
+    """Double-buffered host->device upload pipeline.
+
+    Wraps ``prefetch_iter`` with a ``jax.device_put`` applied in the
+    producer thread, so the H2D copy of item i+1 overlaps the consumer's
+    compute on item i (jax transfers are asynchronous; the producer only
+    *enqueues* them).  Items are arbitrary pytrees of numpy arrays /
+    scalars -- the out-of-core index scan streams
+    ``(window_offset, window_words)`` pairs through this.
+    """
+    import jax
+
+    def produce():
+        for item in make_host_iter():
+            yield jax.tree_util.tree_map(jax.device_put, item)
+
+    yield from prefetch_iter(produce, prefetch)
+
+
 class ChunkedLoader:
     """Iterate SparseBatch chunks over a list of shard files.
 

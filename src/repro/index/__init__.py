@@ -12,11 +12,19 @@ preprocessing and learning stacks already produce:
                 ``.idx`` file (banded bucket tables + packed signature
                 payload), with zero host-side unpacking; ``load_index``
                 -> ``SigIndex`` (mmap'd tables + device-resident packed
-                corpus matrix).
-  query.py   -- ``IndexSearcher``: exact top-k (packed-Hamming kernel
-                brute force over corpus blocks + Theorem-1 rerank) and
+                corpus matrix); ``build_sharded`` -> S contiguous-range
+                shards + manifest; ``append_index`` -> incremental
+                growth without a rebuild.
+  query.py   -- ``IndexSearcher``: exact top-k as ONE fused traced
+                computation (in-jit ``fori_loop`` over corpus blocks
+                carrying the running top-k; out-of-core corpora stream
+                mmap windows through a double-buffered H2D pipeline) and
                 LSH candidate generation + kernel rerank, behind one
                 API, with batched query admission.
+  router.py  -- ``ShardedIndex``: fan a query batch across shard
+                searchers, merge per-shard top-k bit-identically to a
+                single-index search; ``load_sharded`` + incremental
+                ``append``.
 
 The scoring hot path is ``repro.kernels.hamming.packed_match`` -- a
 Pallas kernel registered in the SignatureEngine backend registry
@@ -27,13 +35,17 @@ TuningTable block sizes.
 from repro.index.banding import (BandingConfig, band_keys_from_codes,
                                  band_keys_packed, choose_band_config,
                                  s_curve)
-from repro.index.builder import (IndexMeta, SigIndex, build_band_tables,
-                                 build_index, load_index, read_index_meta)
+from repro.index.builder import (IndexMeta, SigIndex, append_index,
+                                 build_band_tables, build_index,
+                                 build_sharded, load_index,
+                                 merge_band_tables, read_index_meta)
 from repro.index.query import IndexSearcher, SearchResult, resemblance_scores
+from repro.index.router import ShardedIndex, load_sharded, merge_topk
 
 __all__ = [
     "BandingConfig", "IndexMeta", "IndexSearcher", "SearchResult",
-    "SigIndex", "band_keys_from_codes", "band_keys_packed",
-    "build_band_tables", "build_index", "choose_band_config", "load_index",
-    "read_index_meta", "resemblance_scores", "s_curve",
+    "ShardedIndex", "SigIndex", "append_index", "band_keys_from_codes",
+    "band_keys_packed", "build_band_tables", "build_index", "build_sharded",
+    "choose_band_config", "load_index", "load_sharded", "merge_band_tables",
+    "merge_topk", "read_index_meta", "resemblance_scores", "s_curve",
 ]

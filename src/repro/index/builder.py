@@ -37,18 +37,27 @@ Bucket lookup for (band i, key x): binary-search x in
 flat array, so ``load_index(mmap=True)`` serves straight off disk; the
 packed payload additionally uploads once to the device
 (``SigIndex.corpus``) for kernel scoring.
+
+Scale-out entry points: ``build_sharded`` splits a corpus into S
+contiguous-doc-range ``.idx`` shards plus a ``manifest.json`` (served by
+``repro.index.router.ShardedIndex``); ``append_index`` grows an existing
+index in place -- new shards' band keys merge into the bucket tables and
+the old payload streams through verbatim, no re-hash / re-band / re-read
+of the existing corpus.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import struct
 from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.sigshard import read_sig_shard
+from repro.data.sigshard import read_sig_meta, read_sig_shard
 from repro.index.banding import BandingConfig, band_keys_packed
 from repro.kernels.pack import PackSpec
 
@@ -159,24 +168,16 @@ def build_band_tables(keys: np.ndarray
 # Build
 # ---------------------------------------------------------------------------
 
-def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
-                *, set_sizes: Optional[np.ndarray] = None,
-                s: int = 0) -> IndexMeta:
-    """Packed ``.sig`` shards -> one ``.idx`` file.
+def _read_sig_group(sig_paths: Sequence[str], cfg: BandingConfig,
+                    expect: Optional[IndexMeta] = None):
+    """Read + validate a group of ``.sig`` shards (payloads stay mmap'd).
 
-    The corpus is never unpacked on the host: shard payloads are
-    memory-mapped and written through as-is, and band keys come off the
-    device (``band_keys_packed``).  ``set_sizes`` (original nonzero
-    counts per document, same order as the shards) and ``s`` (universe
-    bits) are optional -- when present, queries get the exact Theorem-1
-    debiasing constants instead of the sparse-limit ones.
+    Returns ``(shard_words, labels, band_keys, first_shard_meta)``.
+    ``expect`` (an ``IndexMeta``) pins the wire format when appending to
+    an existing index.
     """
     if not sig_paths:
-        raise ValueError("build_index needs at least one .sig shard")
-    # shard payloads stay memory-mapped: band keys (small) are computed
-    # per shard on device, and the payload section is streamed through
-    # shard by shard at write time -- peak host RAM is one shard, not
-    # the corpus
+        raise ValueError("need at least one .sig shard")
     shard_words, label_parts, key_parts = [], [], []
     meta0 = None
     for path in sig_paths:
@@ -191,6 +192,12 @@ def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
                 raise ValueError(
                     f"banding over {cfg.code_bits}-bit values, shards "
                     f"carry {meta0.code_bits}-bit codes")
+            if expect is not None and \
+                    (sm.k, sm.b, sm.code_bits, sm.words, sm.sentinel) != \
+                    (expect.k, expect.b, expect.code_bits, expect.words,
+                     expect.sentinel):
+                raise ValueError(f"{path}: wire format {sm} != index "
+                                 f"{expect}")
         elif (sm.k, sm.b, sm.code_bits, sm.words, sm.sentinel) != \
                 (meta0.k, meta0.b, meta0.code_bits, meta0.words,
                  meta0.sentinel):
@@ -202,26 +209,19 @@ def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
         key_parts.append(np.asarray(
             band_keys_packed(jnp.asarray(np.ascontiguousarray(words)),
                              spec, cfg)))
-    labels = np.concatenate(label_parts)
-    keys = np.concatenate(key_parts)
-    n = int(labels.shape[0])
-    if set_sizes is not None:
-        set_sizes = np.ascontiguousarray(set_sizes, np.uint32)
-        if set_sizes.shape != (n,):
-            raise ValueError(f"set_sizes shape {set_sizes.shape} != ({n},)")
+    return (shard_words, np.concatenate(label_parts),
+            np.concatenate(key_parts), meta0)
 
-    band_offsets, sorted_keys, bucket_offsets, postings = \
-        build_band_tables(keys)
-    meta = IndexMeta(n=n, k=meta0.k, b=meta0.b, code_bits=meta0.code_bits,
-                     words=meta0.words, sentinel=meta0.sentinel,
-                     has_set_sizes=set_sizes is not None,
-                     n_bands=cfg.n_bands, rows_per_band=cfg.rows_per_band,
-                     n_keys=int(sorted_keys.size), s=s)
-    arrays = {"labels": labels.astype(np.float32),
-              "band_offsets": band_offsets, "keys": sorted_keys,
-              "bucket_offsets": bucket_offsets, "postings": postings}
-    if set_sizes is not None:
-        arrays["set_sizes"] = set_sizes
+
+_WRITE_CHUNK_ROWS = 1 << 16
+
+
+def _write_index(out_path: str, meta: IndexMeta, arrays: dict,
+                 payload_parts) -> None:
+    """Serialize one ``.idx``; ``payload_parts`` is an iterable of
+    (rows, words) uint32 arrays streamed through in bounded row chunks
+    -- an mmap'd part (e.g. the old corpus during ``append_index``)
+    never materializes whole in host RAM."""
     flags = ((_FLAG_SENTINEL if meta.sentinel else 0)
              | (_FLAG_SET_SIZES if meta.has_set_sizes else 0))
     header = MAGIC + struct.pack(
@@ -236,10 +236,12 @@ def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
             f.write(b"\0" * (offsets[name] - pos))
             if name == "payload":
                 written = 0
-                for words in shard_words:          # stream off the mmaps
-                    chunk = np.ascontiguousarray(words, dtype)
-                    f.write(chunk.tobytes())
-                    written += chunk.size
+                for words in payload_parts:        # stream off the mmaps
+                    for off in range(0, words.shape[0], _WRITE_CHUNK_ROWS):
+                        chunk = np.ascontiguousarray(
+                            words[off:off + _WRITE_CHUNK_ROWS], dtype)
+                        f.write(chunk.tobytes())
+                        written += chunk.size
                 assert written == count, (written, count)
                 pos = offsets[name] + 4 * written
                 continue
@@ -247,7 +249,224 @@ def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
             assert arr.size == count, (name, arr.size, count)
             f.write(arr.tobytes())
             pos = offsets[name] + arr.nbytes
+
+
+def _check_set_sizes(set_sizes, n: int) -> Optional[np.ndarray]:
+    if set_sizes is None:
+        return None
+    set_sizes = np.ascontiguousarray(set_sizes, np.uint32)
+    if set_sizes.shape != (n,):
+        raise ValueError(f"set_sizes shape {set_sizes.shape} != ({n},)")
+    return set_sizes
+
+
+def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
+                *, set_sizes: Optional[np.ndarray] = None,
+                s: int = 0) -> IndexMeta:
+    """Packed ``.sig`` shards -> one ``.idx`` file.
+
+    The corpus is never unpacked on the host: shard payloads are
+    memory-mapped and written through as-is, and band keys come off the
+    device (``band_keys_packed``).  ``set_sizes`` (original nonzero
+    counts per document, same order as the shards) and ``s`` (universe
+    bits) are optional -- when present, queries get the exact Theorem-1
+    debiasing constants instead of the sparse-limit ones.
+    """
+    # shard payloads stay memory-mapped: band keys (small) are computed
+    # per shard on device, and the payload section is streamed through
+    # shard by shard at write time -- peak host RAM is one shard, not
+    # the corpus
+    shard_words, labels, keys, meta0 = _read_sig_group(sig_paths, cfg)
+    n = int(labels.shape[0])
+    set_sizes = _check_set_sizes(set_sizes, n)
+
+    band_offsets, sorted_keys, bucket_offsets, postings = \
+        build_band_tables(keys)
+    meta = IndexMeta(n=n, k=meta0.k, b=meta0.b, code_bits=meta0.code_bits,
+                     words=meta0.words, sentinel=meta0.sentinel,
+                     has_set_sizes=set_sizes is not None,
+                     n_bands=cfg.n_bands, rows_per_band=cfg.rows_per_band,
+                     n_keys=int(sorted_keys.size), s=s)
+    arrays = {"labels": labels.astype(np.float32),
+              "band_offsets": band_offsets, "keys": sorted_keys,
+              "bucket_offsets": bucket_offsets, "postings": postings}
+    if set_sizes is not None:
+        arrays["set_sizes"] = set_sizes
+    _write_index(out_path, meta, arrays, shard_words)
     return meta
+
+
+# ---------------------------------------------------------------------------
+# Incremental append + sharded build
+# ---------------------------------------------------------------------------
+
+def merge_band_tables(old: Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray],
+                      new: Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray],
+                      id_offset: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """Merge two band bucket tables; ``new``'s doc ids shift by
+    ``id_offset``.
+
+    Both operands are ``(band_offsets, keys, bucket_offsets, postings)``
+    as built by ``build_band_tables``.  Per band, the postings of both
+    sides are re-grouped by key with a *stable* sort, so old docs keep
+    their ascending order and precede the (also ascending, larger-id)
+    new docs inside every bucket -- the merged table is bit-identical to
+    one built from scratch over the combined corpus, without ever
+    touching the old corpus payload or re-deriving its band keys.
+    """
+    bo_o, k_o, off_o, p_o = old
+    bo_n, k_n, off_n, p_n = new
+    n_bands = len(bo_o) - 1
+    if len(bo_n) - 1 != n_bands:
+        raise ValueError(f"band count mismatch: {n_bands} != {len(bo_n) - 1}")
+    band_offsets = np.zeros(n_bands + 1, np.int64)
+    key_parts, size_parts, post_parts = [], [], []
+    for band in range(n_bands):
+        lo, hi = int(bo_o[band]), int(bo_o[band + 1])
+        ln, hn = int(bo_n[band]), int(bo_n[band + 1])
+        sizes_o = np.asarray(off_o[lo + 1:hi + 1]) - np.asarray(off_o[lo:hi])
+        sizes_n = np.asarray(off_n[ln + 1:hn + 1]) - np.asarray(off_n[ln:hn])
+        keys_rep = np.concatenate([np.repeat(k_o[lo:hi], sizes_o),
+                                   np.repeat(k_n[ln:hn], sizes_n)])
+        posts = np.concatenate([
+            np.asarray(p_o[off_o[lo]:off_o[hi]], np.int64),
+            np.asarray(p_n[off_n[ln]:off_n[hn]], np.int64) + id_offset])
+        order = np.argsort(keys_rep, kind="stable")
+        keys_m, sizes_m = np.unique(keys_rep, return_counts=True)
+        key_parts.append(keys_m.astype(np.int64))
+        size_parts.append(sizes_m.astype(np.int64))
+        post_parts.append(posts[order].astype(np.uint32))
+        band_offsets[band + 1] = band_offsets[band] + keys_m.size
+    keys = (np.concatenate(key_parts) if key_parts
+            else np.zeros(0, np.int64))
+    sizes = (np.concatenate(size_parts) if size_parts
+             else np.zeros(0, np.int64))
+    bucket_offsets = np.zeros(keys.size + 1, np.int64)
+    np.cumsum(sizes, out=bucket_offsets[1:])
+    return (band_offsets, keys, bucket_offsets,
+            np.concatenate(post_parts) if post_parts
+            else np.zeros(0, np.uint32))
+
+
+def append_index(idx_path: str, sig_paths: Sequence[str], *,
+                 set_sizes: Optional[np.ndarray] = None,
+                 out_path: Optional[str] = None) -> IndexMeta:
+    """Extend an existing ``.idx`` with new documents -- no full rebuild.
+
+    The old corpus is never re-hashed, re-banded or re-read from its
+    ``.sig`` shards: only the *new* shards' band keys are computed (on
+    device), the bucket tables merge via ``merge_band_tables``, and the
+    old packed payload streams through verbatim from the mmap.  New docs
+    get ids ``[old_n, old_n + new_n)``; the result is bit-identical to
+    ``build_index`` over old + new shards.  Writes atomically (temp file
+    + ``os.replace``) to ``out_path`` (default: in place).
+    """
+    old = load_index(idx_path, mmap=True)
+    om = old.meta
+    cfg = om.banding
+    shard_words, new_labels, new_keys, _ = _read_sig_group(sig_paths, cfg,
+                                                           expect=om)
+    n_new = int(new_labels.shape[0])
+    set_sizes = _check_set_sizes(set_sizes, n_new)
+    if om.has_set_sizes and set_sizes is None:
+        raise ValueError("index stores set sizes; append needs set_sizes "
+                         "for the new documents")
+    if not om.has_set_sizes and set_sizes is not None:
+        raise ValueError("index has no set sizes; cannot add them on append")
+
+    new_tables = build_band_tables(new_keys)
+    band_offsets, keys, bucket_offsets, postings = merge_band_tables(
+        (old.band_offsets, old.keys, old.bucket_offsets, old.postings),
+        new_tables, om.n)
+    meta = dataclasses.replace(om, n=om.n + n_new,
+                               n_keys=int(keys.size))
+    arrays = {"labels": np.concatenate([old.labels,
+                                        new_labels.astype(np.float32)]),
+              "band_offsets": band_offsets, "keys": keys,
+              "bucket_offsets": bucket_offsets, "postings": postings}
+    if om.has_set_sizes:
+        arrays["set_sizes"] = np.concatenate([old.set_sizes, set_sizes])
+    dest = out_path or idx_path
+    tmp = dest + ".tmp"
+    _write_index(tmp, meta, arrays, [old.words_host] + shard_words)
+    os.replace(tmp, dest)
+    return meta
+
+
+MANIFEST_NAME = "manifest.json"
+
+
+def write_manifest(out_dir: str, paths: Sequence[str],
+                   counts: Sequence[int]) -> None:
+    """Write the shard manifest (names, doc-id offsets, total n) that
+    ``repro.index.router.load_sharded`` consumes -- the ONE serializer,
+    shared by ``build_sharded`` and ``ShardedIndex.append``."""
+    offsets = np.cumsum([0] + list(counts))
+    manifest = {"version": 1,
+                "shards": [os.path.basename(p) for p in paths],
+                "offsets": [int(o) for o in offsets[:-1]],
+                "n": int(offsets[-1])}
+    with open(os.path.join(out_dir, MANIFEST_NAME), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def build_sharded(sig_paths: Sequence[str], out_dir: str, cfg: BandingConfig,
+                  *, n_shards: int, set_sizes: Optional[np.ndarray] = None,
+                  s: int = 0) -> List[Tuple[str, IndexMeta]]:
+    """Split ``.sig`` shards into ``n_shards`` contiguous ``.idx`` files.
+
+    Documents keep their global order: index shard i holds the doc-id
+    range ``[offsets[i], offsets[i+1])``, so a router over the shards can
+    translate local top-k hits back to global ids.  Writes
+    ``shard_%05d.idx`` plus a ``manifest.json`` (shard names, doc-id
+    offsets, total n) that ``repro.index.router.load_sharded`` consumes.
+    Splits at ``.sig``-file granularity, balancing document counts.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > len(sig_paths):
+        raise ValueError(f"n_shards={n_shards} > {len(sig_paths)} .sig "
+                         "shards (splits are at .sig-file granularity)")
+    counts = [read_sig_meta(p).n for p in sig_paths]
+    total = sum(counts)
+    # contiguous near-even split by document count: each group takes
+    # files until the cumulative count reaches its share, leaving at
+    # least one file for every later group
+    groups: List[List[str]] = []
+    group_counts: List[int] = []
+    i = cum = 0
+    for g in range(n_shards):
+        take_max = (len(sig_paths) - i) - (n_shards - g - 1)
+        target_cum = total * (g + 1) / n_shards
+        cur: List[str] = []
+        cur_n = 0
+        while len(cur) < take_max and (not cur or cum + cur_n < target_cum):
+            cur.append(sig_paths[i])
+            cur_n += counts[i]
+            i += 1
+        groups.append(cur)
+        group_counts.append(cur_n)
+        cum += cur_n
+    assert i == len(sig_paths) and all(groups)
+
+    os.makedirs(out_dir, exist_ok=True)
+    out: List[Tuple[str, IndexMeta]] = []
+    doc0 = 0
+    for i, group in enumerate(groups):
+        path = os.path.join(out_dir, f"shard_{i:05d}.idx")
+        n_i = group_counts[i]
+        sizes_i = (None if set_sizes is None
+                   else np.asarray(set_sizes)[doc0:doc0 + n_i])
+        meta = build_index(group, path, cfg, set_sizes=sizes_i, s=s)
+        assert meta.n == n_i, (meta.n, n_i)
+        out.append((path, meta))
+        doc0 += n_i
+    write_manifest(out_dir, [p for p, _ in out], group_counts)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -319,11 +538,35 @@ class SigIndex:
 
     def candidates(self, query_keys: np.ndarray) -> np.ndarray:
         """Union of posting lists over all bands for one query's keys."""
-        hits = [self.bucket(band, int(query_keys[band]))
-                for band in range(self.meta.n_bands)]
-        if not hits:
-            return np.zeros(0, np.int64)
-        return np.unique(np.concatenate(hits)).astype(np.int64)
+        return self.candidates_batch(np.asarray(query_keys)[None, :])[0]
+
+    def candidates_batch(self, query_keys: np.ndarray) -> List[np.ndarray]:
+        """Per-query candidate unions for a (Q, n_bands) key batch.
+
+        One vectorized ``np.searchsorted`` per band over the whole query
+        batch (instead of one binary search per (query, band) pair), then
+        per-query posting-list unions -- the batched admission path's
+        candidate generator.
+        """
+        query_keys = np.asarray(query_keys)
+        q = query_keys.shape[0]
+        hits: List[List[np.ndarray]] = [[] for _ in range(q)]
+        for band in range(self.meta.n_bands):
+            lo, hi = int(self.band_offsets[band]), \
+                int(self.band_offsets[band + 1])
+            band_keys = self.keys[lo:hi]
+            if band_keys.size == 0:
+                continue
+            pos = np.searchsorted(band_keys, query_keys[:, band])
+            found = pos < band_keys.size
+            found[found] = (band_keys[pos[found]]
+                            == query_keys[found, band])
+            for qi in np.nonzero(found)[0]:
+                t = lo + pos[qi]
+                hits[qi].append(self.postings[
+                    self.bucket_offsets[t]:self.bucket_offsets[t + 1]])
+        return [np.unique(np.concatenate(h)).astype(np.int64) if h
+                else np.zeros(0, np.int64) for h in hits]
 
 
 def load_index(path: str, *, mmap: bool = True) -> SigIndex:

@@ -1,0 +1,179 @@
+"""Sharded-index router: fan a query batch across ``.idx`` shards and
+merge per-shard top-k bit-identically to a single-index search.
+
+``build_sharded`` (``repro.index.builder``) splits a corpus into S
+contiguous-doc-range shards; this module serves them as one logical
+index:
+
+  * ``ShardedIndex``  -- per-shard ``IndexSearcher``s + the global doc-id
+    offsets.  ``search`` fans the query batch out (every shard's fused
+    exact scan / LSH rerank dispatches before any result is harvested --
+    jax's async dispatch overlaps the shards on one device and is the
+    seam for per-shard devices/hosts later), then ``merge_topk`` folds
+    the per-shard results.
+  * ``merge_topk``    -- stable merge of per-shard (scores, local ids):
+    scores are computed by the same kernel path on every shard, shards
+    are concatenated in ascending-global-id order, and ties break to the
+    earliest position -- exactly ``lax.top_k``'s tie rule over the whole
+    corpus, so the merged top-k (ids AND scores) is bit-identical to a
+    single-index search over the same documents.
+  * ``load_sharded``  -- read ``manifest.json`` + shards from a
+    ``build_sharded`` output directory.
+
+Incremental growth: ``ShardedIndex.append`` extends the LAST shard via
+``repro.index.builder.append_index`` (later shards would shift global
+ids), updates the manifest, and reloads only that shard -- a crawler can
+grow the corpus without a full rebuild.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.index.banding import band_keys_packed
+from repro.index.builder import (MANIFEST_NAME, SigIndex, append_index,
+                                 load_index, write_manifest)
+from repro.index.query import (IndexSearcher, SearchResult, _BatchedAdmission,
+                               _query_words)
+from repro.kernels import PackedSignatures
+
+
+def merge_topk(results: Sequence[SearchResult], offsets: Sequence[int],
+               topk: int) -> SearchResult:
+    """Fold per-shard top-k (local ids) into global top-k.
+
+    Shard results arrive sorted by descending score with ascending local
+    ids inside every tie run; concatenating them in shard order makes
+    position order == ascending global id inside every tie run, so a
+    *stable* sort by descending score reproduces ``lax.top_k``'s
+    lowest-id tie-breaking over the concatenated corpus bit-exactly.
+    """
+    if not results:
+        raise ValueError("merge_topk needs at least one shard result")
+    cat_s = np.concatenate([r.scores for r in results], axis=1)
+    cat_i = np.concatenate(
+        [np.where(r.indices >= 0, r.indices + off, np.int64(-1))
+         for r, off in zip(results, offsets)], axis=1)
+    order = np.argsort(-cat_s, axis=1, kind="stable")[:, :topk]
+    out_s = np.take_along_axis(cat_s, order, axis=1)
+    out_i = np.take_along_axis(cat_i, order, axis=1)
+    pad = topk - out_s.shape[1]
+    if pad > 0:
+        out_s = np.pad(out_s, ((0, 0), (0, pad)),
+                       constant_values=-np.inf)
+        out_i = np.pad(out_i, ((0, 0), (0, pad)), constant_values=-1)
+    n_cand = None
+    if all(r.n_candidates is not None for r in results):
+        n_cand = np.sum([r.n_candidates for r in results], axis=0)
+    return SearchResult(out_i, out_s.astype(np.float32), n_cand)
+
+
+class ShardedIndex(_BatchedAdmission):
+    """One logical index over S ``.idx`` shards with contiguous doc ranges.
+
+    Mirrors the ``IndexSearcher`` serving API (``search`` plus the
+    shared ``submit``/``flush`` batched admission) and returns *global*
+    doc ids.  ``searcher_kwargs`` flow to every per-shard
+    ``IndexSearcher`` (backend, corpus_block, max_device_bytes, ... --
+    an out-of-core device window applies per shard).
+    """
+
+    def __init__(self, indexes: Sequence[SigIndex], *,
+                 paths: Optional[Sequence[str]] = None,
+                 manifest_dir: Optional[str] = None,
+                 **searcher_kwargs):
+        if not indexes:
+            raise ValueError("ShardedIndex needs at least one shard")
+        spec0 = indexes[0].spec
+        for i, idx in enumerate(indexes[1:], 1):
+            if idx.spec != spec0 or idx.banding != indexes[0].banding:
+                raise ValueError(
+                    f"shard {i} wire/banding {idx.spec}/{idx.banding} != "
+                    f"shard 0 {spec0}/{indexes[0].banding}")
+        self._searcher_kwargs = dict(searcher_kwargs)
+        self.searchers = [IndexSearcher(idx, **searcher_kwargs)
+                          for idx in indexes]
+        self.paths = list(paths) if paths else None
+        self.manifest_dir = manifest_dir
+        self.offsets = np.cumsum([0] + [idx.n for idx in indexes])[:-1]
+        self._admission_init()
+
+    @property
+    def n(self) -> int:
+        return int(sum(s.index.n for s in self.searchers))
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.searchers)
+
+    @property
+    def spec(self):
+        return self.searchers[0].index.spec
+
+    def search(self, queries: Union[PackedSignatures, jax.Array, np.ndarray],
+               topk: int = 10, *, mode: str = "exact",
+               query_sizes: Optional[np.ndarray] = None) -> SearchResult:
+        """Global top-k: fan out to every shard searcher, merge.
+
+        Every shard's device work dispatches (``IndexSearcher.dispatch``)
+        before any shard's result is harvested to host arrays, so shard
+        i+1's candidate generation / scan launch overlaps shard i's
+        device work; band keys for the LSH path are computed once for
+        the batch and shared across shards.
+        """
+        qwords = _query_words(queries, self.spec)
+        qkeys = None
+        if mode == "lsh":
+            idx0 = self.searchers[0].index
+            qkeys = np.asarray(band_keys_packed(qwords, idx0.spec,
+                                                idx0.banding))
+        pending = [s.dispatch(qwords, topk, mode=mode,
+                              query_sizes=query_sizes, _qkeys=qkeys)
+                   for s in self.searchers]
+        return merge_topk([p() for p in pending], self.offsets, topk)
+
+    # -- incremental growth ----------------------------------------------
+    def append(self, sig_paths: Sequence[str], *,
+               set_sizes: Optional[np.ndarray] = None):
+        """Append new documents to the LAST shard (``append_index``) and
+        reload it; global ids of existing documents are unchanged.
+        Requires shard paths (construct via ``load_sharded``)."""
+        if not self.paths:
+            raise ValueError("append needs shard paths; load this index "
+                             "via load_sharded()")
+        last = self.paths[-1]
+        meta = append_index(last, sig_paths, set_sizes=set_sizes)
+        self.searchers[-1] = IndexSearcher(load_index(last),
+                                           **self._searcher_kwargs)
+        if self.manifest_dir:
+            write_manifest(self.manifest_dir, self.paths,
+                           [s.index.n for s in self.searchers])
+        return meta
+
+
+def load_sharded(shard_dir: str, *, mmap: bool = True,
+                 **searcher_kwargs) -> ShardedIndex:
+    """Load a ``build_sharded`` output directory into a ``ShardedIndex``.
+
+    ``searcher_kwargs`` flow to every per-shard ``IndexSearcher``
+    (``backend=``, ``corpus_block=``, ``max_device_bytes=``, ...).
+    """
+    man_path = os.path.join(shard_dir, MANIFEST_NAME)
+    with open(man_path) as f:
+        manifest = json.load(f)
+    if manifest.get("version") != 1:
+        raise ValueError(f"{man_path}: unsupported manifest version "
+                         f"{manifest.get('version')}")
+    paths = [os.path.join(shard_dir, name) for name in manifest["shards"]]
+    indexes = [load_index(p, mmap=mmap) for p in paths]
+    sharded = ShardedIndex(indexes, paths=paths, manifest_dir=shard_dir,
+                           **searcher_kwargs)
+    if sharded.n != manifest["n"]:
+        raise ValueError(f"{man_path}: manifest n={manifest['n']} != "
+                         f"loaded {sharded.n}")
+    return sharded

@@ -655,30 +655,65 @@ def batch_signatures(batch: SparseBatch, family, *, b: int = 0,
     return eng(batch)
 
 
-def tune(engine: SignatureEngine, batch: SparseBatch, candidates,
-         iters: int = 3, table: Optional[TuningTable] = None) -> dict:
-    """Time candidate block dicts for ``engine`` on ``batch`` and record
-    the winner in the tuning table (the ROADMAP TPU/GPU tuning loop)."""
+def _time_candidates(candidates, run_one, iters: int):
+    """Shared tuning loop: compile once, time ``iters`` runs, keep the
+    fastest candidate block dict."""
     import time
     candidates = list(candidates)
     if not candidates:
         raise ValueError("tune() needs at least one candidate block dict")
     best, best_t = None, float("inf")
     for blocks in candidates:
-        probe = SignatureEngine(engine.family_obj, b=engine.b,
-                                backend=engine.backend, packed=engine.packed,
-                                blocks=blocks)
-        out = probe(batch)                       # compile once
-        jax.block_until_ready(out.data if isinstance(out, PackedSignatures)
-                              else out)
+        run_one(blocks)                          # compile once
         t0 = time.perf_counter()
         for _ in range(iters):
-            out = probe(batch)
-            jax.block_until_ready(out.data if isinstance(out, PackedSignatures)
-                                  else out)
+            run_one(blocks)
         dt = (time.perf_counter() - t0) / iters
         if dt < best_t:
             best, best_t = dict(blocks), dt
+    return best
+
+
+def tune(engine, batch, candidates, iters: int = 3,
+         table: Optional[TuningTable] = None,
+         backend: Optional[str] = None) -> dict:
+    """Time candidate block dicts and record the winner in the tuning
+    table (the ROADMAP TPU/GPU tuning loop).
+
+    Two schemes:
+      * ``engine`` is a ``SignatureEngine`` and ``batch`` a
+        ``SparseBatch`` -- tunes the signature kernels (minhash/oph).
+      * ``engine`` is a ``PackSpec`` and ``batch`` a
+        ``(qwords, cwords)`` pair of packed operands -- tunes the
+        retrieval kernel (``repro.kernels.hamming.packed_match``),
+        recording under scheme ``"hamming"`` keyed on the packed word
+        count; ``backend`` resolves through the registry ("auto" per
+        hardware).
+    """
+    if isinstance(engine, PackSpec):
+        from repro.kernels.hamming import packed_match
+        qwords, cwords = batch
+        be = resolve_backend(backend).name
+
+        def run_one(blocks):
+            out = packed_match(qwords, cwords, engine, backend=be,
+                               blocks=blocks)
+            jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
+
+        best = _time_candidates(candidates, run_one, iters)
+        tab = table or default_tuning_table()
+        tab.record(be, "hamming", engine.k, engine.words, best)
+        return best
+
+    def run_one(blocks):
+        probe = SignatureEngine(engine.family_obj, b=engine.b,
+                                backend=engine.backend, packed=engine.packed,
+                                blocks=blocks)
+        out = probe(batch)
+        jax.block_until_ready(out.data if isinstance(out, PackedSignatures)
+                              else out)
+
+    best = _time_candidates(candidates, run_one, iters)
     tab = table or engine._tuning or default_tuning_table()
     tab.record(engine.backend, engine.statics["scheme"],
                engine.statics["k"], batch.indices.shape[1], best)

@@ -5,6 +5,7 @@ similarity-search serving over a packed signature index.
         [--tokens N | --requests N]
     PYTHONPATH=src python -m repro.launch.serve --index [--mode exact|lsh]
         [--docs N] [--queries N] [--topk K] [--densify d]
+        [--shards S] [--device-window BYTES]
 
 LMs run the KV-cache serve_step autoregressively for --tokens steps on a
 batch of prompts; recsys archs score --requests synthetic requests through
@@ -13,6 +14,10 @@ paper's online-preprocessing path).  ``--index`` drives the retrieval
 workload (``repro.index``): shard a synthetic corpus, hash it to packed
 ``.sig`` shards, build the banded ``.idx``, then serve batched top-k
 queries through the packed-Hamming kernel, reporting p50/p99 latency.
+``--shards S`` builds S ``.idx`` shards and serves them through the
+``ShardedIndex`` router (bit-identical merge); ``--device-window`` caps
+the device-resident packed corpus bytes -- beyond it the exact path
+streams mmap windows (out-of-core serving).
 """
 
 from __future__ import annotations
@@ -36,8 +41,8 @@ def serve_index(args) -> None:
     from repro.data.pipeline import make_sharded_dataset
     from repro.data.preprocess import preprocess_shards
     from repro.data.synthetic import DatasetSpec
-    from repro.index import (IndexSearcher, build_index, choose_band_config,
-                             load_index)
+    from repro.index import (IndexSearcher, build_index, build_sharded,
+                             choose_band_config, load_index, load_sharded)
     from repro.train.online import make_family
 
     k, b, s = args.k, args.b, 16
@@ -58,21 +63,42 @@ def serve_index(args) -> None:
             k, b, code_bits=(b + 1 if args.densify == "sentinel" else b),
             threshold=args.threshold)
         t0 = time.perf_counter()
-        meta = build_index(sig_paths, os.path.join(tmp, "corpus.idx"), cfg)
-        t_build = time.perf_counter() - t0
-        index = load_index(os.path.join(tmp, "corpus.idx"))
-        searcher = IndexSearcher(index)
-        print(f"indexed {meta.n} docs (k={k} b={b} "
+        if args.shards > 1:
+            shard_dir = os.path.join(tmp, "shards")
+            built = build_sharded(sig_paths, shard_dir, cfg,
+                                  n_shards=args.shards)
+            t_build = time.perf_counter() - t0
+            n_total = sum(m.n for _, m in built)
+            payload = sum(m.payload_bytes for _, m in built)
+            searcher = load_sharded(shard_dir,
+                                    max_device_bytes=args.device_window)
+            words_of = _sharded_row_reader(searcher)
+            what = f"{args.shards} shards"
+        else:
+            meta = build_index(sig_paths, os.path.join(tmp, "corpus.idx"),
+                               cfg)
+            t_build = time.perf_counter() - t0
+            n_total, payload = meta.n, meta.payload_bytes
+            index = load_index(os.path.join(tmp, "corpus.idx"))
+            searcher = IndexSearcher(index,
+                                     max_device_bytes=args.device_window)
+            words_of = lambda i: np.asarray(index.words_host[i])
+            what = "1 index"
+        streamed = (any(s.streamed for s in searcher.searchers)
+                    if args.shards > 1 else searcher.streamed)
+        print(f"indexed {n_total} docs into {what} (k={k} b={b} "
               f"bands={cfg.n_bands}x{cfg.rows_per_band}): "
               f"hash {t_hash:.2f}s, build {t_build:.2f}s, "
-              f"payload {meta.payload_bytes:,} B")
+              f"payload {payload:,} B"
+              + (f", streamed (window {args.device_window:,} B)"
+                 if streamed else ""))
         rng = np.random.default_rng(1)
         lat = []
         hits0 = None
         for r in range(args.requests):
-            picks = rng.integers(0, meta.n, args.queries)
+            picks = rng.integers(0, n_total, args.queries)
             for i in picks:
-                searcher.submit(np.asarray(index.words_host[int(i)]))
+                searcher.submit(words_of(int(i)))
             t0 = time.perf_counter()
             out = searcher.flush(args.topk, mode=args.mode)
             lat.append((time.perf_counter() - t0) * 1e3)
@@ -85,6 +111,19 @@ def serve_index(args) -> None:
               f"({args.mode}): p50={lat[len(lat) // 2]:.1f}ms "
               f"max={lat[-1]:.1f}ms {qps:.0f} q/s "
               f"self-hit@1={hits0:.2f}")
+
+
+def _sharded_row_reader(sharded):
+    """Global doc id -> packed query row, off the shards' mmaps."""
+    import numpy as np
+    offsets = list(sharded.offsets) + [sharded.n]
+
+    def words_of(i: int) -> np.ndarray:
+        shard = int(np.searchsorted(offsets, i, side="right")) - 1
+        local = i - int(offsets[shard])
+        return np.asarray(
+            sharded.searchers[shard].index.words_host[local])
+    return words_of
 
 
 def main():
@@ -105,6 +144,12 @@ def main():
     ap.add_argument("--scheme", default="oph")
     ap.add_argument("--densify", default="rotation")
     ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve through a ShardedIndex router over S "
+                         ".idx shards (--index)")
+    ap.add_argument("--device-window", type=int, default=None,
+                    help="max device-resident packed-corpus bytes; larger "
+                         "corpora stream mmap windows (--index)")
     args = ap.parse_args()
 
     if args.index:

@@ -140,7 +140,11 @@ class SignatureCache:
     the jitted SGD step itself), so the host only moves k*b bits per
     example.
 
-    Lifecycle: ``max_cache_bytes`` caps the shard footprint -- chunks
+    Lifecycle: ``ttl_s`` expires shards by file mtime -- stale shard
+    files are dropped on populate (leftovers in a shared ``cache_dir``)
+    and on replay (a stale tracked shard invalidates the cache, which
+    re-hashes on the next pass; ``ttl_dropped`` counts removals).
+    ``max_cache_bytes`` caps the shard footprint -- chunks
     past the budget are not written and get re-hashed during replay
     (``stats.uncached_chunks``); the tail read resumes at the first
     uncached chunk's shard offset, recorded at populate time via
@@ -154,7 +158,8 @@ class SignatureCache:
 
     def __init__(self, stream: SignatureStream, cache_dir: Optional[str] = None,
                  *, prefetch: int = 2, straggler_deadline_s: float = 30.0,
-                 max_retries: int = 2, max_cache_bytes: Optional[int] = None):
+                 max_retries: int = 2, max_cache_bytes: Optional[int] = None,
+                 ttl_s: Optional[float] = None):
         self.stream = stream
         self.b = stream.b
         fam = stream.family
@@ -168,6 +173,8 @@ class SignatureCache:
         self.deadline = straggler_deadline_s
         self.max_retries = max_retries
         self.max_cache_bytes = max_cache_bytes
+        self.ttl_s = ttl_s
+        self.ttl_dropped = 0          # stale shard files removed so far
         self.populated = False
         self.closed = False
         self.paths: List[str] = []
@@ -190,10 +197,55 @@ class SignatureCache:
     def __iter__(self):
         if self.closed:
             raise RuntimeError("SignatureCache is closed")
+        if self.populated and self._ttl_expired():
+            self.evict()
         if self.populated:
             yield from self._replay()
         else:
             yield from self._populate()
+
+    # -- TTL eviction ---------------------------------------------------
+    def _ttl_expired(self) -> bool:
+        """Drop tracked shard files older than ``ttl_s`` (by mtime).
+
+        Replay needs the full ordered shard sequence, so any stale shard
+        invalidates the cache: the stale files are removed here and the
+        caller evicts + re-populates on the next pass.
+        """
+        if self.ttl_s is None:
+            return False
+        cutoff = time.time() - self.ttl_s
+
+        def is_stale(path: str) -> bool:
+            try:
+                return os.path.getmtime(path) <= cutoff
+            except OSError:        # vanished (e.g. swept by another process)
+                return True
+
+        stale = [p for p in self.paths if is_stale(p)]
+        for path in stale:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+        self.ttl_dropped += len(stale)
+        return bool(stale)
+
+    def _ttl_sweep_dir(self) -> None:
+        """Populate-time sweep: clear stale ``sig_*.sig`` leftovers from a
+        shared/persistent ``cache_dir`` (files this instance never wrote)
+        before writing fresh shards over them."""
+        if self.ttl_s is None:
+            return
+        import glob as _glob
+        cutoff = time.time() - self.ttl_s
+        for path in _glob.glob(os.path.join(self.cache_dir, "sig_*.sig")):
+            try:
+                if os.path.getmtime(path) <= cutoff:
+                    os.remove(path)
+                    self.ttl_dropped += 1
+            except OSError:
+                pass
 
     # -- lifecycle ------------------------------------------------------
     def evict(self) -> None:
@@ -249,6 +301,7 @@ class SignatureCache:
         # and read some raw bytes already; restart the accounting so
         # replay never sees duplicates and the reduction stays honest
         self.evict()
+        self._ttl_sweep_dir()
         raw_bytes_before = self.stream.loader.stats.bytes_read
         budget = self.max_cache_bytes
         for i, (sig, labels) in enumerate(self.stream):

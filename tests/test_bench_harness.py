@@ -58,3 +58,41 @@ def test_unknown_exact_name_errors(monkeypatch):
 
 def test_search_index_registered():
     assert any(name == "search_index" for name, _ in bench_run.MODULES)
+
+
+def test_repeat_reports_median_and_json(monkeypatch, capsys, tmp_path):
+    """--repeat N runs each module N times and reports the per-row
+    MEDIAN wall-clock; --json writes the merged rows."""
+    import json
+    import types
+    calls = []
+    mod = types.ModuleType("benchmarks.fake_med")
+
+    def _run():
+        calls.append(1)
+        # deterministic per-call timings: 30, 10, 20 -> median 20
+        us = {1: 30.0, 2: 10.0, 3: 20.0}[len(calls)]
+        return [("med/row", us, {"payload": len(calls)})]
+    mod.run = _run
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_med", mod)
+    out_json = str(tmp_path / "rows.json")
+    _run_with(monkeypatch, [("fake_med", "x")],
+              ["--repeat", "3", "--json", out_json])
+    bench_run.main()
+    assert len(calls) == 3
+    out = capsys.readouterr().out
+    assert "med/row,20.0" in out                 # median of 30/10/20
+    with open(out_json) as f:
+        doc = json.load(f)
+    assert doc == [{"name": "med/row", "us_per_call": 20.0, "payload": 3,
+                    "repeat": 3, "us_min": 10.0, "us_max": 30.0}]
+
+
+def test_repeat_must_be_positive(monkeypatch):
+    _run_with(monkeypatch, list(bench_run.MODULES), ["--repeat", "0"])
+    with pytest.raises(SystemExit):
+        bench_run.main()
+
+
+def test_search_scaling_registered():
+    assert any(name == "search_scaling" for name, _ in bench_run.MODULES)

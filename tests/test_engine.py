@@ -320,3 +320,31 @@ def test_no_pallas_builders_outside_kernels():
             if builder.search(src):
                 offenders.append(os.path.join(dirpath, name))
     assert not offenders, offenders
+
+
+def test_tune_accepts_packed_match_scheme():
+    """engine.tune() with a PackSpec times packed_match candidates and
+    records the winner under scheme "hamming" keyed on the word count."""
+    import numpy as np
+
+    from repro.kernels import packed_match
+    from repro.kernels.engine import TuningTable, tune
+    from repro.kernels.pack import PackSpec
+
+    spec = PackSpec(128, 8)
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 2**32, (8, spec.words), dtype=np.uint64) \
+        .astype(np.uint32)
+    c = rng.integers(0, 2**32, (64, spec.words), dtype=np.uint64) \
+        .astype(np.uint32)
+    tab = TuningTable()
+    candidates = [{"blk_q": 8, "blk_n": 64, "blk_k": 128},
+                  {"blk_q": 8, "blk_n": 128, "blk_k": 128}]
+    best = tune(spec, (q, c), candidates, iters=1, table=tab,
+                backend="interpret")
+    assert best in candidates
+    assert tab.lookup("interpret", "hamming", spec.k, spec.words) == best
+    # the recorded blocks drive packed_match and agree with the oracle
+    out = packed_match(q, c, spec, backend="interpret", tuning=tab)
+    want = packed_match(q, c, spec, backend="ref")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))

@@ -357,3 +357,124 @@ def test_build_band_tables_structure():
     # bucket for band 0 key 1 -> docs 0,1,3 (ascending)
     assert postings[bucket_offsets[0]:bucket_offsets[1]].tolist() == [0, 1, 3]
     assert postings[bucket_offsets[2]:bucket_offsets[3]].tolist() == [0, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Fused exact scan: one traced computation, bit-identical, out-of-core
+# ---------------------------------------------------------------------------
+
+def test_fused_scan_bit_identical_to_blockloop_reference(corpus_idx):
+    """The fused in-jit scan returns exactly (ids AND scores) what the
+    PR-4 per-block host loop returned."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    q = jnp.asarray(np.ascontiguousarray(index.words_host[10:30]))
+    fused = IndexSearcher(index, backend="interpret", corpus_block=128)
+    ref = IndexSearcher(index, backend="interpret", corpus_block=128,
+                        exact_impl="blockloop")
+    r_f = fused.search(q, 10, mode="exact")
+    r_b = ref.search(q, 10, mode="exact")
+    assert np.array_equal(r_f.indices, r_b.indices)
+    assert np.array_equal(r_f.scores, r_b.scores)
+    with pytest.raises(ValueError, match="exact_impl"):
+        IndexSearcher(index, exact_impl="nope")
+
+
+def test_exact_flush_is_one_traced_computation(corpus_idx, monkeypatch):
+    """flush() dispatches the fused scan exactly once, and a repeat flush
+    with the same (batch, corpus, topk, block) is a jit-cache hit -- no
+    per-block host round trips, no retrace."""
+    import repro.index.query as query
+
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    searcher = IndexSearcher(index, backend="interpret", corpus_block=64)
+    assert meta.n // 64 > 2                      # genuinely multi-block
+    calls = []
+    real_scan = query._exact_scan
+
+    def counting_scan(*args, **kwargs):
+        calls.append(1)
+        return real_scan(*args, **kwargs)
+
+    monkeypatch.setattr(query, "_exact_scan", counting_scan)
+    for i in (3, 4, 5):
+        searcher.submit(np.asarray(index.words_host[i]))
+    searcher.flush(10, mode="exact")
+    assert len(calls) == 1                       # ONE dispatch per flush
+    traces = query.TRACE_COUNTS["exact_scan"]
+    for i in (6, 7, 8):
+        searcher.submit(np.asarray(index.words_host[i]))
+    searcher.flush(10, mode="exact")
+    assert len(calls) == 2
+    assert query.TRACE_COUNTS["exact_scan"] == traces   # cache hit
+
+
+def test_streamed_out_of_core_bit_identical(corpus_idx):
+    """A device window smaller than the corpus forces the mmap-window
+    streaming path; results are bit-identical to the in-core scan."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    q = jnp.asarray(np.ascontiguousarray(index.words_host[:12]))
+    incore = IndexSearcher(index, backend="interpret", corpus_block=128)
+    window = meta.payload_bytes // 3
+    streamed = IndexSearcher(index, backend="interpret", corpus_block=128,
+                             max_device_bytes=window)
+    assert streamed.streamed and meta.payload_bytes > window
+    assert not incore.streamed
+    r_i = incore.search(q, 10, mode="exact")
+    r_s = streamed.search(q, 10, mode="exact")
+    assert np.array_equal(r_i.indices, r_s.indices)
+    assert np.array_equal(r_i.scores, r_s.scores)
+    # LSH on a streamed searcher gathers candidates off the mmap instead
+    # of uploading the corpus; results match the in-core LSH path
+    l_i = incore.search(q, 10, mode="lsh")
+    l_s = streamed.search(q, 10, mode="lsh")
+    assert np.array_equal(l_i.indices, l_s.indices)
+    assert np.array_equal(l_i.scores, l_s.scores)
+
+
+def test_lsh_subbatch_pipeline_matches_single_batch(corpus_idx):
+    """lsh_batch pipelining (async dispatch per sub-batch) returns the
+    same results as one monolithic batch."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    q = jnp.asarray(np.ascontiguousarray(index.words_host[5:18]))
+    mono = IndexSearcher(index, backend="interpret", corpus_block=128)
+    piped = IndexSearcher(index, backend="interpret", corpus_block=128,
+                          lsh_batch=4)
+    r_m = mono.search(q, 10, mode="lsh")
+    r_p = piped.search(q, 10, mode="lsh")
+    assert np.array_equal(r_m.indices, r_p.indices)
+    assert np.array_equal(r_m.scores, r_p.scores)
+    assert np.array_equal(r_m.n_candidates, r_p.n_candidates)
+
+
+def test_candidates_batch_matches_per_query_buckets(corpus_idx):
+    """The batched searchsorted candidate lookup equals a per-(query,
+    band) bucket walk."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    wire = jnp.asarray(np.ascontiguousarray(index.words_host[:8]))
+    qkeys = np.asarray(band_keys_packed(wire, index.spec, index.banding))
+    batch = index.candidates_batch(qkeys)
+    for i in range(qkeys.shape[0]):
+        per_band = [index.bucket(band, int(qkeys[i, band]))
+                    for band in range(meta.n_bands)]
+        want = (np.unique(np.concatenate(per_band)).astype(np.int64)
+                if per_band else np.zeros(0, np.int64))
+        np.testing.assert_array_equal(batch[i], want)
+
+
+def test_blockloop_refuses_out_of_core_corpus(corpus_idx):
+    """blockloop keeps the corpus device-resident, so combining it with
+    a device window smaller than the payload must fail loudly instead of
+    silently uploading past the cap."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    searcher = IndexSearcher(index, backend="interpret", corpus_block=128,
+                             exact_impl="blockloop",
+                             max_device_bytes=meta.payload_bytes // 2)
+    q = jnp.asarray(np.ascontiguousarray(index.words_host[:2]))
+    with pytest.raises(ValueError, match="max_device_bytes"):
+        searcher.search(q, 5, mode="exact")

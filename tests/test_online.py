@@ -327,3 +327,57 @@ def test_cache_budget_replay_resumes_mid_shard(shard_paths, tmp_path):
     for (s0, y0), (s1, y1) in zip(replay, fresh):
         np.testing.assert_array_equal(s0, s1)
         np.testing.assert_array_equal(y0, y1)
+
+
+def test_cache_ttl_drops_stale_shards_and_repopulates(shard_paths, tmp_path):
+    """TTL eviction (mtime-based): stale shard files are removed on the
+    next pass, the cache re-populates, and the output stays bit-exact."""
+    import os
+
+    fam = make_family(jax.random.PRNGKey(3), "oph", K, D_BITS)
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=64),
+        cache_dir=str(tmp_path), ttl_s=3600.0)
+    epoch0 = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    assert cache.populated and cache.stats.shards > 1
+    # fresh shards: replay untouched
+    replay = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    assert cache.populated and cache.ttl_dropped == 0
+    # age one shard past the TTL (mtime injection)
+    stale_path = cache.paths[1]
+    old = os.path.getmtime(stale_path) - 7200.0
+    os.utime(stale_path, (old, old))
+    repop = [(np.asarray(s), np.asarray(y)) for s, y in cache]
+    assert cache.ttl_dropped == 1
+    assert cache.populated                       # pass re-populated it
+    assert all(os.path.exists(p) for p in cache.paths)
+    assert len(epoch0) == len(replay) == len(repop) > 1
+    for (s0, y0), (s1, y1), (s2, y2) in zip(epoch0, replay, repop):
+        np.testing.assert_array_equal(s0, s1)
+        np.testing.assert_array_equal(s0, s2)
+        np.testing.assert_array_equal(y0, y2)
+
+
+def test_cache_ttl_sweeps_stale_leftovers_on_populate(shard_paths, tmp_path):
+    """A shared cache_dir may hold sig_*.sig leftovers from an earlier
+    process; populate removes the ones older than the TTL."""
+    import os
+
+    leftover = str(tmp_path / "sig_99999.sig")
+    with open(leftover, "wb") as f:
+        f.write(b"stale leftover")
+    old = os.path.getmtime(leftover) - 7200.0
+    os.utime(leftover, (old, old))
+    fresh = str(tmp_path / "sig_88888.sig")
+    with open(fresh, "wb") as f:
+        f.write(b"fresh leftover")
+
+    fam = make_family(jax.random.PRNGKey(4), "2u", K, D_BITS)
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=64),
+        cache_dir=str(tmp_path), ttl_s=3600.0)
+    for _ in cache:
+        pass
+    assert not os.path.exists(leftover)          # past the TTL: swept
+    assert os.path.exists(fresh)                 # inside the TTL: kept
+    assert cache.ttl_dropped == 1
