@@ -38,6 +38,8 @@ MODULES = [
     ("search_index", "§1 search workload (repro.index)"),
     ("search_scaling", "serving scale-out (fused scan, shards, "
                        "out-of-core)"),
+    ("search_serving", "continuous-batching server (latency vs load, "
+                       "live appends)"),
 ]
 
 

@@ -1,0 +1,215 @@
+"""Continuous-batching serving benchmark: the ``SearchServer`` under
+open-loop Zipf/Poisson traffic, with and without live index appends.
+
+The PR-6 serving claims, measured end to end on a synthetic sharded
+corpus:
+
+  * p50/p99 end-to-end latency, queue-wait, and achieved q/s at several
+    offered loads (Poisson arrivals, Zipf-popular query ids) through the
+    deadline-aware micro-batching dispatch loop,
+  * the same open-loop run while a concurrent appender thread grows the
+    last shard via ``ShardedIndex.append`` (directory lock + atomic
+    generation-bumped manifest) and the server's per-flush ``refresh``
+    picks the growth up live -- every admitted request still resolves,
+  * micro-batched results checked bit-identical per query to a direct
+    ``search`` call on the same searcher.
+
+``--json PATH`` writes the rows as a JSON artifact (uploaded by the
+slow-tier CI job next to ``search_scaling.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, fmt_rows
+from repro.data.pipeline import make_sharded_dataset
+from repro.data.preprocess import preprocess_shards
+from repro.data.synthetic import DatasetSpec
+from repro.index import build_sharded, choose_band_config, load_sharded
+from repro.launch.server import SearchServer, ZipfianTraffic
+from repro.train.online import make_family
+
+D_BITS = 16
+K, B = 128, 8
+N_DOCS = 2048
+N_SHARDS = 2
+N_APPEND_SHARDS = 3
+CORPUS_BLOCK = 512
+TOPK = 10
+MAX_BATCH = 8
+MAX_DELAY_S = 0.002
+RATES_QPS = (200.0, 2000.0)
+N_REQUESTS = 192
+
+
+def _build_sigs(tmp: str, name: str, n: int, seed: int) -> list:
+    spec = DatasetSpec(name, n=n, D=2**D_BITS, avg_nnz=64,
+                       n_prototypes=8, overlap=0.8, seed=seed)
+    fam = make_family(jax.random.PRNGKey(0), "oph", K, D_BITS,
+                      densify="rotation")
+    raw = make_sharded_dataset(spec, os.path.join(tmp, f"raw_{name}"),
+                               n_shards=4)
+    preprocess_shards(raw, os.path.join(tmp, f"sig_{name}"), fam, b=B,
+                      chunk_size=max(128, n // 4),
+                      loader_kwargs={"lane_multiple": 8})
+    return sorted(glob.glob(os.path.join(tmp, f"sig_{name}", "*.sig")))
+
+
+def _row_reader(router):
+    offsets = list(router.offsets) + [router.n]
+
+    def words_of(i: int) -> np.ndarray:
+        shard = int(np.searchsorted(offsets, i, side="right")) - 1
+        return np.asarray(router.searchers[shard]
+                          .index.words_host[i - int(offsets[shard])])
+    return words_of
+
+
+def _warmup(router, words_of) -> None:
+    """Compile every query-batch shape a flush can produce (1..MAX_BATCH),
+    so the timed open-loop runs measure serving, not tracing."""
+    for nq in range(1, MAX_BATCH + 1):
+        q = np.stack([words_of(i % router.n) for i in range(nq)])
+        router.search(q, TOPK, mode="exact")
+
+
+def _drive(router, words_of, n_docs: int, rate: float, m: int,
+           seed: int) -> dict:
+    """One open-loop run: m Zipf queries at Poisson rate; returns the
+    server's stats snapshot + achieved q/s."""
+    traffic = ZipfianTraffic(n_docs, alpha=1.1, seed=seed)
+    ids = traffic.ids(m)
+    arrivals = traffic.arrival_offsets(m, rate)
+    server = SearchServer(router, max_batch=MAX_BATCH,
+                          max_delay_s=MAX_DELAY_S, topk=TOPK, mode="exact")
+    with server:
+        t_start = time.monotonic()
+        handles = []
+        for doc, at in zip(ids, arrivals):
+            lag = at - (time.monotonic() - t_start)
+            if lag > 0:
+                time.sleep(lag)
+            handles.append(server.submit(words_of(int(doc))))
+        for h in handles:
+            h.result(timeout=120.0)
+        elapsed = time.monotonic() - t_start
+    snap = server.stats.snapshot()
+    snap["achieved_qps"] = m / elapsed
+    return snap
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    cfg = choose_band_config(K, B, threshold=0.5)
+    with tempfile.TemporaryDirectory(prefix="repro_search_serving_") as tmp:
+        sig_paths = _build_sigs(tmp, "corpus", N_DOCS, seed=0)
+        extra_sigs = _build_sigs(tmp, "extra", N_DOCS // 4, seed=9)
+        shard_dir = os.path.join(tmp, "shards")
+        build_sharded(sig_paths, shard_dir, cfg, n_shards=N_SHARDS)
+        router = load_sharded(shard_dir, corpus_block=CORPUS_BLOCK)
+        words_of = _row_reader(router)
+        n0 = router.n
+        _warmup(router, words_of)
+
+        # -- micro-batched == direct (bit-identity) ----------------------
+        rng = np.random.default_rng(3)
+        picks = rng.integers(0, n0, 16)
+        direct = router.search(
+            np.stack([words_of(int(i)) for i in picks]), TOPK, mode="exact")
+        with SearchServer(router, max_batch=MAX_BATCH,
+                          max_delay_s=MAX_DELAY_S, topk=TOPK,
+                          mode="exact") as srv:
+            served = [srv.submit(words_of(int(i))) for i in picks]
+            served = [h.result(timeout=120.0) for h in served]
+        identical = all(
+            np.array_equal(res.indices[0], direct.indices[j])
+            and np.array_equal(res.scores[0], direct.scores[j])
+            for j, res in enumerate(served))
+        rows.append(("serving/bit_identical", 0.0, {
+            "queries": len(picks),
+            "acceptance": "micro-batched results == direct search()",
+            "ok": bool(identical)}))
+
+        # -- latency/throughput vs offered load --------------------------
+        for rate in RATES_QPS:
+            snap = _drive(router, words_of, n0, rate, N_REQUESTS, seed=5)
+            rows.append((f"serving/load_{int(rate)}qps",
+                         snap["latency_p50_ms"] * 1e3, {
+                             "offered_qps": rate,
+                             "achieved_qps": round(snap["achieved_qps"], 1),
+                             "latency_p50_ms": round(
+                                 snap["latency_p50_ms"], 3),
+                             "latency_p99_ms": round(
+                                 snap["latency_p99_ms"], 3),
+                             "queue_wait_p50_ms": round(
+                                 snap["queue_wait_p50_ms"], 3),
+                             "flush_p50_ms": round(snap["flush_p50_ms"], 3),
+                             "mean_batch": round(snap["mean_batch"], 2),
+                             "flush_full": snap["flush_full"],
+                             "flush_aged": snap["flush_aged"],
+                             "requests": snap["requests"]}))
+
+        # -- serving while a concurrent appender grows the index ---------
+        stop = threading.Event()
+        appended = []
+
+        def appender():
+            for sig in extra_sigs[:N_APPEND_SHARDS]:
+                if stop.is_set():
+                    return
+                appended.append(router.append([sig]).n)
+                time.sleep(0.02)
+
+        t = threading.Thread(target=appender)
+        t.start()
+        try:
+            snap = _drive(router, words_of, n0, RATES_QPS[0],
+                          N_REQUESTS, seed=6)
+        finally:
+            stop.set()
+            t.join()
+        router.refresh()
+        grew = router.n > n0
+        rows.append(("serving/with_live_appends",
+                     snap["latency_p50_ms"] * 1e3, {
+                         "offered_qps": RATES_QPS[0],
+                         "achieved_qps": round(snap["achieved_qps"], 1),
+                         "latency_p50_ms": round(snap["latency_p50_ms"], 3),
+                         "latency_p99_ms": round(snap["latency_p99_ms"], 3),
+                         "docs_before": n0, "docs_after": router.n,
+                         "appends": len(appended),
+                         "requests": snap["requests"],
+                         "errors": snap["errors"],
+                         "acceptance": "all requests served while the "
+                                       "corpus grows under the reader",
+                         "ok": bool(grew and snap["errors"] == 0
+                                    and snap["requests"] == N_REQUESTS)}))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    rows = run()
+    print(fmt_rows(rows))
+    if args.json:
+        doc = [{"name": name, "us_per_call": us, **derived}
+               for name, us, derived in rows]
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -253,6 +253,11 @@ class ChunkedLoader:
                     skip_examples: int = 0) -> Iterator[SparseBatch]:
         pending_sets: List[np.ndarray] = []
         pending_labels: List[float] = []
+        # consume via a moving cursor instead of re-slicing the remainder
+        # per chunk (pending = pending[chunk:] re-copied O(n) per yielded
+        # chunk -- O(n^2) for many small chunks per shard); the buffers
+        # compact once per shard, so each element moves at most twice
+        start = 0
         skip = skip_examples
         for i in range(start_shard, len(self.shard_paths)):
             worker = i % self.n_workers
@@ -264,11 +269,14 @@ class ChunkedLoader:
                 skip -= take
             pending_sets.extend(sets)
             pending_labels.extend(labels.tolist())
-            while len(pending_sets) >= self.chunk_size:
-                yield self._make_batch(pending_sets[:self.chunk_size],
-                                       pending_labels[:self.chunk_size])
-                pending_sets = pending_sets[self.chunk_size:]
-                pending_labels = pending_labels[self.chunk_size:]
+            while len(pending_sets) - start >= self.chunk_size:
+                stop = start + self.chunk_size
+                yield self._make_batch(pending_sets[start:stop],
+                                       pending_labels[start:stop])
+                start = stop
+            if start:
+                del pending_sets[:start], pending_labels[:start]
+                start = 0
         if pending_sets:
             yield self._make_batch(pending_sets, pending_labels)
 

@@ -29,6 +29,7 @@ Codes follow ``repro.core.bbit.pack_codes``: value j occupies bits
 from __future__ import annotations
 
 import dataclasses
+import os
 import struct
 
 import numpy as np
@@ -62,10 +63,22 @@ class SigShardMeta:
         return ((labels_end + _ALIGN - 1) // _ALIGN) * _ALIGN
 
 
+def _write_payload(f, words: np.ndarray) -> None:
+    """Payload write hook (monkeypatched by the mid-write-crash test)."""
+    f.write(words.tobytes())
+
+
 def write_sig_shard(path: str, words: np.ndarray, labels: np.ndarray, *,
                     k: int, b: int, code_bits: int,
                     sentinel: bool = False) -> SigShardMeta:
-    """Write one packed shard; ``words`` is (n, words_per_row) uint32."""
+    """Write one packed shard; ``words`` is (n, words_per_row) uint32.
+
+    The write is atomic: bytes land in a same-directory temp file that is
+    ``os.replace``'d over ``path`` only once complete, so a concurrent
+    reader (or a TTL sweep in a shared ``SignatureCache`` dir) can never
+    observe a truncated shard -- a crash mid-write leaves no ``path`` at
+    all, and the temp file is unlinked on failure.
+    """
     words = np.ascontiguousarray(words, dtype=np.uint32)
     labels = np.ascontiguousarray(labels, dtype=np.float32)
     n, wpr = words.shape
@@ -77,11 +90,20 @@ def write_sig_shard(path: str, words: np.ndarray, labels: np.ndarray, *,
         "<7I", VERSION, n, k, b, code_bits, wpr,
         _FLAG_SENTINEL if sentinel else 0)
     header = header.ljust(HEADER_BYTES, b"\0")
-    with open(path, "wb") as f:
-        f.write(header)
-        f.write(labels.tobytes())
-        f.write(b"\0" * (meta.payload_offset - HEADER_BYTES - 4 * n))
-        f.write(words.tobytes())
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(header)
+            f.write(labels.tobytes())
+            f.write(b"\0" * (meta.payload_offset - HEADER_BYTES - 4 * n))
+            _write_payload(f, words)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
     return meta
 
 

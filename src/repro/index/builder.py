@@ -57,6 +57,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.lockfile import FileLock
 from repro.data.sigshard import read_sig_meta, read_sig_shard
 from repro.index.banding import BandingConfig, band_keys_packed
 from repro.kernels.pack import PackSpec
@@ -363,8 +364,20 @@ def append_index(idx_path: str, sig_paths: Sequence[str], *,
     old packed payload streams through verbatim from the mmap.  New docs
     get ids ``[old_n, old_n + new_n)``; the result is bit-identical to
     ``build_index`` over old + new shards.  Writes atomically (temp file
-    + ``os.replace``) to ``out_path`` (default: in place).
+    + ``os.replace``) to ``out_path`` (default: in place), under the
+    destination's lock file (``<dest>.lock``) so two appenders cannot
+    interleave the read-merge-replace; readers stay lock-free -- an open
+    mmap keeps the pre-append inode alive across the replace.
     """
+    dest = out_path or idx_path
+    with FileLock(dest + ".lock"):
+        return _append_index_locked(idx_path, sig_paths,
+                                    set_sizes=set_sizes, dest=dest)
+
+
+def _append_index_locked(idx_path: str, sig_paths: Sequence[str], *,
+                         set_sizes: Optional[np.ndarray],
+                         dest: str) -> IndexMeta:
     old = load_index(idx_path, mmap=True)
     om = old.meta
     cfg = om.banding
@@ -390,7 +403,6 @@ def append_index(idx_path: str, sig_paths: Sequence[str], *,
               "bucket_offsets": bucket_offsets, "postings": postings}
     if om.has_set_sizes:
         arrays["set_sizes"] = np.concatenate([old.set_sizes, set_sizes])
-    dest = out_path or idx_path
     tmp = dest + ".tmp"
     _write_index(tmp, meta, arrays, [old.words_host] + shard_words)
     os.replace(tmp, dest)
@@ -398,20 +410,54 @@ def append_index(idx_path: str, sig_paths: Sequence[str], *,
 
 
 MANIFEST_NAME = "manifest.json"
+LOCK_NAME = ".lock"
+
+
+def sharded_lock(shard_dir: str, **kwargs) -> FileLock:
+    """The writer lock for a sharded-index directory -- taken by every
+    mutation (``ShardedIndex.append``); readers never take it (manifest
+    and shard replacements are atomic)."""
+    return FileLock(os.path.join(shard_dir, LOCK_NAME), **kwargs)
 
 
 def write_manifest(out_dir: str, paths: Sequence[str],
-                   counts: Sequence[int]) -> None:
+                   counts: Sequence[int], *, generation: int = 0) -> None:
     """Write the shard manifest (names, doc-id offsets, total n) that
     ``repro.index.router.load_sharded`` consumes -- the ONE serializer,
-    shared by ``build_sharded`` and ``ShardedIndex.append``."""
+    shared by ``build_sharded`` and ``ShardedIndex.append``.
+
+    ``generation`` is a monotone mutation counter: every live append
+    bumps it, and readers (``ShardedIndex.refresh``) re-read the
+    manifest and reload only when it moved.  The write is atomic
+    (same-directory temp + ``os.replace``), so a reader parsing the
+    manifest mid-append sees the old or the new version, never a torn
+    JSON.
+    """
     offsets = np.cumsum([0] + list(counts))
     manifest = {"version": 1,
+                "generation": int(generation),
                 "shards": [os.path.basename(p) for p in paths],
                 "offsets": [int(o) for o in offsets[:-1]],
                 "n": int(offsets[-1])}
-    with open(os.path.join(out_dir, MANIFEST_NAME), "w") as f:
+    dest = os.path.join(out_dir, MANIFEST_NAME)
+    tmp = f"{dest}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(manifest, f, indent=2)
+    os.replace(tmp, dest)
+
+
+def read_manifest(shard_dir: str) -> dict:
+    """Read + validate ``manifest.json`` (the reader side of
+    ``write_manifest``; ``generation`` defaults to 0 for manifests
+    written before live appends existed)."""
+    man_path = os.path.join(shard_dir, MANIFEST_NAME)
+    with open(man_path) as f:
+        manifest = json.load(f)
+    if manifest.get("version") != 1:
+        raise ValueError(f"{man_path}: unsupported manifest version "
+                         f"{manifest.get('version')}")
+    manifest.setdefault("generation", 0)
+    return manifest
 
 
 def build_sharded(sig_paths: Sequence[str], out_dir: str, cfg: BandingConfig,

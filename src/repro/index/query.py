@@ -99,6 +99,36 @@ def resemblance_scores(matches: jax.Array, both_empty: Optional[jax.Array],
     return (p_hat - jnp.float32(c1)) * jnp.float32(1.0 / (1.0 - c1))
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Sizing of the out-of-core exact scan, honoring the device budget.
+
+    ``inflight`` windows can be device-resident at once: the one being
+    scanned, up to ``prefetch`` queued in the H2D pipeline, and one held
+    by the producer thread while the queue is full -- so
+    ``inflight * window_bytes <= max_device_bytes`` whenever the budget
+    admits at least one corpus row per window (the hard floor).
+    """
+
+    window: int        # rows per streamed window (multiple of block)
+    block: int         # scan block height (<= the searcher's corpus_block)
+    prefetch: int      # H2D pipeline depth actually used
+    row_bytes: int
+
+    @property
+    def inflight(self) -> int:
+        return self.prefetch + 2
+
+    @property
+    def window_bytes(self) -> int:
+        return self.window * self.row_bytes
+
+    @property
+    def resident_bytes(self) -> int:
+        """Worst-case device bytes held by streamed corpus windows."""
+        return self.inflight * self.window_bytes
+
+
 @dataclasses.dataclass
 class SearchResult:
     """Top-k per query: global doc ids (-1 past the candidate count) and
@@ -360,6 +390,33 @@ class IndexSearcher(_BatchedAdmission):
             q_sizes, doc_sizes, D=D, **self._scan_statics())
         return lambda: self._pad_result(best_i, best_s, q, topk, kk)
 
+    def _stream_plan(self) -> StreamPlan:
+        """Size the streamed windows so the budget is actually honored.
+
+        ``inflight = prefetch + 2`` windows can be device-resident at
+        once (scanned + queued + producer-held), so each window gets
+        ``max_device_bytes // inflight`` bytes, floored to a ``block``
+        multiple.  When that leaves less than one ``corpus_block`` of
+        rows, the pipeline depth shrinks first (bigger windows beat
+        deeper prefetch) and then the scan block itself shrinks below
+        ``corpus_block`` -- down to the hard floor of one row per
+        window, the only case where the stated budget is physically
+        unsatisfiable.
+        """
+        row_bytes = 4 * self.index.meta.words
+        budget = self.max_device_bytes or 0
+
+        def plan(prefetch: int) -> StreamPlan:
+            rows = budget // ((prefetch + 2) * row_bytes)
+            block = min(self.corpus_block, max(1, rows))
+            window = max(block, rows // block * block)
+            return StreamPlan(window, block, prefetch, row_bytes)
+
+        p = plan(self.stream_prefetch)
+        while p.prefetch > 0 and p.block < self.corpus_block:
+            p = plan(p.prefetch - 1)
+        return p
+
     def _exact_streamed(self, qwords, topk: int, q_sizes):
         """Out-of-core exact scan: windows of the mmap'd packed payload
         stream through a double-buffered H2D pipeline; the top-k carry
@@ -369,35 +426,32 @@ class IndexSearcher(_BatchedAdmission):
         kk = min(topk, n)
         words = self.index.words_host
         w = self.index.meta.words
-        block = self.corpus_block
-        # the H2D pipeline keeps up to stream_prefetch windows in flight
-        # on top of the one being scanned, so the window is sized to the
-        # budget divided by that multiplier -- max_device_bytes bounds
-        # what is actually device-resident, not one window
-        budget = (self.max_device_bytes or 0) // (self.stream_prefetch + 1)
-        rows_fit = max(1, budget // (4 * w))
-        window = max(block, rows_fit // block * block)
+        p = self._stream_plan()
         q_sizes, doc_sizes, D = self._rerank_operands(q_sizes)
         statics = self._scan_statics()
+        statics["block"] = p.block
 
         def host_windows():
-            for lo in range(0, self._n_pad, window):
-                hi = min(lo + window, n)
-                if hi - lo == window:
+            for lo in range(0, n, p.window):
+                hi = min(lo + p.window, n)
+                if hi - lo == p.window:
                     # full window: hand the contiguous mmap slice straight
                     # to device_put (no host memset/copy on the hot path)
                     yield np.int32(lo), words[lo:hi]
                 else:
-                    buf = np.zeros((window, w), np.uint32)
-                    if hi > lo:
-                        buf[:hi - lo] = words[lo:hi]
+                    buf = np.zeros((p.window, w), np.uint32)
+                    buf[:hi - lo] = words[lo:hi]
                     yield np.int32(lo), buf
 
         best_s = jnp.full((q, kk), -jnp.inf, jnp.float32)
         best_i = jnp.full((q, kk), -1, jnp.int32)
-        for lo, win in device_put_iter(host_windows, self.stream_prefetch):
+        for lo, win in device_put_iter(host_windows, p.prefetch):
             best_s, best_i = _exact_scan(qwords, win, best_s, best_i, lo,
                                          q_sizes, doc_sizes, D=D, **statics)
+            # backpressure: wait out window i's scan before pulling more
+            # windows off the pipeline, so dispatched-but-unexecuted scans
+            # never pin extra windows beyond the inflight accounting
+            best_s.block_until_ready()
         return lambda: self._pad_result(best_i, best_s, q, topk, kk)
 
     def _exact_blockloop(self, qwords, topk: int, q_sizes):

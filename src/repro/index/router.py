@@ -20,24 +20,34 @@ index:
   * ``load_sharded``  -- read ``manifest.json`` + shards from a
     ``build_sharded`` output directory.
 
-Incremental growth: ``ShardedIndex.append`` extends the LAST shard via
-``repro.index.builder.append_index`` (later shards would shift global
-ids), updates the manifest, and reloads only that shard -- a crawler can
-grow the corpus without a full rebuild.
+Live growth under readers: ``ShardedIndex.append`` extends the LAST
+shard via ``repro.index.builder.append_index`` (later shards would shift
+global ids) under the directory's lock file (``sharded_lock``), rewrites
+the manifest atomically with a bumped ``generation``, and swaps the
+router's (searchers, offsets) state in one assignment -- a concurrently
+running ``search``/``flush`` reads ONE consistent snapshot (taken once
+at entry), so it returns results against either the pre- or the
+post-append corpus, never a torn mix.  ``refresh`` is the reader side:
+re-read the manifest (written atomically, so never torn) and reload only
+the shards whose (name, doc count) changed -- how a serving process
+picks up appends made by a crawler process
+(``repro.launch.server.SearchServer`` calls it before every flush).
 """
 
 from __future__ import annotations
 
-import json
+import dataclasses
 import os
-from typing import Optional, Sequence, Union
+import threading
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
 from repro.index.banding import band_keys_packed
 from repro.index.builder import (MANIFEST_NAME, SigIndex, append_index,
-                                 load_index, write_manifest)
+                                 load_index, read_manifest, sharded_lock,
+                                 write_manifest)
 from repro.index.query import (IndexSearcher, SearchResult, _BatchedAdmission,
                                _query_words)
 from repro.kernels import PackedSignatures
@@ -73,6 +83,34 @@ def merge_topk(results: Sequence[SearchResult], offsets: Sequence[int],
     return SearchResult(out_i, out_s.astype(np.float32), n_cand)
 
 
+@dataclasses.dataclass(frozen=True)
+class _RouterState:
+    """One immutable, internally consistent view of the shard set.
+
+    Mutations (``append``, ``refresh``) build a whole new state and swap
+    it in with a single attribute assignment; every ``search`` snapshots
+    ``self._state`` exactly once, so a racing mutation can never hand a
+    query old offsets with new searchers (a torn view).
+    """
+
+    searchers: Tuple[IndexSearcher, ...]
+    offsets: np.ndarray            # global doc-id offset per shard
+    paths: Optional[Tuple[str, ...]]
+    generation: int
+
+    @property
+    def n(self) -> int:
+        return int(sum(s.index.n for s in self.searchers))
+
+
+def _make_state(searchers: Sequence[IndexSearcher],
+                paths: Optional[Sequence[str]],
+                generation: int) -> _RouterState:
+    offsets = np.cumsum([0] + [s.index.n for s in searchers])[:-1]
+    return _RouterState(tuple(searchers), offsets,
+                        tuple(paths) if paths else None, generation)
+
+
 class ShardedIndex(_BatchedAdmission):
     """One logical index over S ``.idx`` shards with contiguous doc ranges.
 
@@ -86,6 +124,7 @@ class ShardedIndex(_BatchedAdmission):
     def __init__(self, indexes: Sequence[SigIndex], *,
                  paths: Optional[Sequence[str]] = None,
                  manifest_dir: Optional[str] = None,
+                 generation: int = 0,
                  **searcher_kwargs):
         if not indexes:
             raise ValueError("ShardedIndex needs at least one shard")
@@ -96,24 +135,45 @@ class ShardedIndex(_BatchedAdmission):
                     f"shard {i} wire/banding {idx.spec}/{idx.banding} != "
                     f"shard 0 {spec0}/{indexes[0].banding}")
         self._searcher_kwargs = dict(searcher_kwargs)
-        self.searchers = [IndexSearcher(idx, **searcher_kwargs)
-                          for idx in indexes]
-        self.paths = list(paths) if paths else None
         self.manifest_dir = manifest_dir
-        self.offsets = np.cumsum([0] + [idx.n for idx in indexes])[:-1]
+        # Serializes state swaps so a refresh that read an older manifest
+        # can never overwrite a concurrent append's newer state
+        # (generations only move forward).
+        self._swap_lock = threading.Lock()
+        self._state = _make_state(
+            [IndexSearcher(idx, **searcher_kwargs) for idx in indexes],
+            paths, generation)
         self._admission_init()
+
+    # -- snapshot accessors (each reads self._state exactly once) --------
+    @property
+    def searchers(self) -> Tuple[IndexSearcher, ...]:
+        return self._state.searchers
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return self._state.offsets
+
+    @property
+    def paths(self) -> Optional[Tuple[str, ...]]:
+        return self._state.paths
+
+    @property
+    def generation(self) -> int:
+        """The manifest generation this router currently serves."""
+        return self._state.generation
 
     @property
     def n(self) -> int:
-        return int(sum(s.index.n for s in self.searchers))
+        return self._state.n
 
     @property
     def n_shards(self) -> int:
-        return len(self.searchers)
+        return len(self._state.searchers)
 
     @property
     def spec(self):
-        return self.searchers[0].index.spec
+        return self._state.searchers[0].index.spec
 
     def search(self, queries: Union[PackedSignatures, jax.Array, np.ndarray],
                topk: int = 10, *, mode: str = "exact",
@@ -124,36 +184,108 @@ class ShardedIndex(_BatchedAdmission):
         before any shard's result is harvested to host arrays, so shard
         i+1's candidate generation / scan launch overlaps shard i's
         device work; band keys for the LSH path are computed once for
-        the batch and shared across shards.
+        the batch and shared across shards.  The shard set is snapshotted
+        ONCE here, so a concurrent ``append``/``refresh`` never tears
+        this call's view.
         """
-        qwords = _query_words(queries, self.spec)
+        state = self._state
+        qwords = _query_words(queries, state.searchers[0].index.spec)
         qkeys = None
         if mode == "lsh":
-            idx0 = self.searchers[0].index
+            idx0 = state.searchers[0].index
             qkeys = np.asarray(band_keys_packed(qwords, idx0.spec,
                                                 idx0.banding))
         pending = [s.dispatch(qwords, topk, mode=mode,
                               query_sizes=query_sizes, _qkeys=qkeys)
-                   for s in self.searchers]
-        return merge_topk([p() for p in pending], self.offsets, topk)
+                   for s in state.searchers]
+        return merge_topk([p() for p in pending], state.offsets, topk)
 
-    # -- incremental growth ----------------------------------------------
+    # -- live growth -----------------------------------------------------
     def append(self, sig_paths: Sequence[str], *,
                set_sizes: Optional[np.ndarray] = None):
-        """Append new documents to the LAST shard (``append_index``) and
-        reload it; global ids of existing documents are unchanged.
-        Requires shard paths (construct via ``load_sharded``)."""
+        """Append new documents to the LAST shard (``append_index``),
+        concurrently safe with readers.
+
+        Holds the directory lock (so two appenders serialize), refreshes
+        first (picking up appends other processes landed), rewrites the
+        manifest atomically with a bumped generation, and swaps this
+        router's state in one assignment.  Existing global ids are
+        unchanged; a racing ``search`` sees the pre- or post-append
+        corpus, never a mix.  Requires shard paths (construct via
+        ``load_sharded``).
+        """
         if not self.paths:
             raise ValueError("append needs shard paths; load this index "
                              "via load_sharded()")
-        last = self.paths[-1]
-        meta = append_index(last, sig_paths, set_sizes=set_sizes)
-        self.searchers[-1] = IndexSearcher(load_index(last),
-                                           **self._searcher_kwargs)
-        if self.manifest_dir:
-            write_manifest(self.manifest_dir, self.paths,
-                           [s.index.n for s in self.searchers])
+        if not self.manifest_dir:
+            raise ValueError("append needs a manifest dir; load this "
+                             "index via load_sharded()")
+        with sharded_lock(self.manifest_dir):
+            self.refresh()
+            state = self._state
+            last = state.paths[-1]
+            meta = append_index(last, sig_paths, set_sizes=set_sizes)
+            grown = IndexSearcher(load_index(last), **self._searcher_kwargs)
+            searchers = state.searchers[:-1] + (grown,)
+            write_manifest(self.manifest_dir, state.paths,
+                           [s.index.n for s in searchers],
+                           generation=state.generation + 1)
+            with self._swap_lock:
+                self._state = _make_state(searchers, state.paths,
+                                          state.generation + 1)
         return meta
+
+    def refresh(self, *, max_attempts: int = 5) -> bool:
+        """Re-read the manifest; reload shards another process changed.
+
+        Returns True when the served state moved.  Only shards whose
+        (name, doc count) differ from the current snapshot are reloaded;
+        unchanged shards keep their device-resident corpus.  If a writer
+        replaces a shard file between the manifest read and the shard
+        load (the loaded count disagrees with the manifest), the whole
+        read retries -- the swapped-in state is always internally
+        consistent.
+        """
+        if not self.manifest_dir:
+            return False
+        for _ in range(max_attempts):
+            manifest = read_manifest(self.manifest_dir)
+            state = self._state
+            if manifest["generation"] == state.generation:
+                return False
+            names = manifest["shards"]
+            counts = [int(b) - int(a) for a, b in
+                      zip(manifest["offsets"],
+                          list(manifest["offsets"][1:]) + [manifest["n"]])]
+            paths = [os.path.join(self.manifest_dir, nm) for nm in names]
+            old = {}
+            if state.paths:
+                old = {(p, s.index.n): s
+                       for p, s in zip(state.paths, state.searchers)}
+            searchers = []
+            consistent = True
+            for path, count in zip(paths, counts):
+                keep = old.get((path, count))
+                if keep is not None:
+                    searchers.append(keep)
+                    continue
+                loaded = IndexSearcher(load_index(path),
+                                       **self._searcher_kwargs)
+                if loaded.index.n != count:
+                    consistent = False     # raced a writer; re-read
+                    break
+                searchers.append(loaded)
+            if consistent:
+                with self._swap_lock:
+                    if manifest["generation"] <= self._state.generation:
+                        return False   # a concurrent append moved further
+                    self._state = _make_state(searchers, paths,
+                                              manifest["generation"])
+                return True
+        raise RuntimeError(
+            f"refresh({self.manifest_dir}) kept racing a writer: shard "
+            f"doc counts never matched the manifest after "
+            f"{max_attempts} attempts")
 
 
 def load_sharded(shard_dir: str, *, mmap: bool = True,
@@ -163,15 +295,12 @@ def load_sharded(shard_dir: str, *, mmap: bool = True,
     ``searcher_kwargs`` flow to every per-shard ``IndexSearcher``
     (``backend=``, ``corpus_block=``, ``max_device_bytes=``, ...).
     """
+    manifest = read_manifest(shard_dir)
     man_path = os.path.join(shard_dir, MANIFEST_NAME)
-    with open(man_path) as f:
-        manifest = json.load(f)
-    if manifest.get("version") != 1:
-        raise ValueError(f"{man_path}: unsupported manifest version "
-                         f"{manifest.get('version')}")
     paths = [os.path.join(shard_dir, name) for name in manifest["shards"]]
     indexes = [load_index(p, mmap=mmap) for p in paths]
     sharded = ShardedIndex(indexes, paths=paths, manifest_dir=shard_dir,
+                           generation=manifest["generation"],
                            **searcher_kwargs)
     if sharded.n != manifest["n"]:
         raise ValueError(f"{man_path}: manifest n={manifest['n']} != "

@@ -1,11 +1,12 @@
 """Serving launcher: batched decode (LMs), batched scoring (recsys), or
 similarity-search serving over a packed signature index.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch <id> [--smoke]
-        [--tokens N | --requests N]
+    PYTHONPATH=src python -m repro.launch.serve --arch <id>
+        [--smoke | --no-smoke] [--tokens N | --requests N]
     PYTHONPATH=src python -m repro.launch.serve --index [--mode exact|lsh]
         [--docs N] [--queries N] [--topk K] [--densify d]
         [--shards S] [--device-window BYTES]
+        [--serve --rate QPS --max-delay-ms MS]
 
 LMs run the KV-cache serve_step autoregressively for --tokens steps on a
 batch of prompts; recsys archs score --requests synthetic requests through
@@ -17,7 +18,11 @@ queries through the packed-Hamming kernel, reporting p50/p99 latency.
 ``--shards S`` builds S ``.idx`` shards and serves them through the
 ``ShardedIndex`` router (bit-identical merge); ``--device-window`` caps
 the device-resident packed corpus bytes -- beyond it the exact path
-streams mmap windows (out-of-core serving).
+streams mmap windows (out-of-core serving).  ``--serve`` puts the
+continuous-batching ``SearchServer`` in front of the searcher and
+replays Zipf-popular queries at a Poisson ``--rate`` offered load,
+reporting the server's queue-wait / flush / end-to-end latency
+percentiles instead of closed-loop batch latency.
 """
 
 from __future__ import annotations
@@ -92,6 +97,9 @@ def serve_index(args) -> None:
               f"payload {payload:,} B"
               + (f", streamed (window {args.device_window:,} B)"
                  if streamed else ""))
+        if args.serve:
+            _serve_traffic(searcher, words_of, n_total, args)
+            return
         rng = np.random.default_rng(1)
         lat = []
         hits0 = None
@@ -113,6 +121,41 @@ def serve_index(args) -> None:
               f"self-hit@1={hits0:.2f}")
 
 
+def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
+    """Open-loop serving: SearchServer under Zipf/Poisson traffic."""
+    from repro.launch.server import SearchServer, ZipfianTraffic
+
+    traffic = ZipfianTraffic(n_total, alpha=args.zipf_alpha, seed=1)
+    m = args.requests * args.queries
+    ids = traffic.ids(m)
+    arrivals = traffic.arrival_offsets(m, args.rate)
+    server = SearchServer(searcher, max_batch=args.queries,
+                          max_delay_s=args.max_delay_ms / 1e3,
+                          topk=args.topk, mode=args.mode)
+    with server:
+        t_start = time.monotonic()
+        handles = []
+        for doc, at in zip(ids, arrivals):
+            lag = at - (time.monotonic() - t_start)
+            if lag > 0:
+                time.sleep(lag)
+            handles.append(server.submit(words_of(int(doc))))
+        for h in handles:
+            h.result(timeout=120.0)
+        elapsed = time.monotonic() - t_start
+    snap = server.stats.snapshot()
+    print(f"served {snap['requests']} requests in {snap['batches']} "
+          f"micro-batches (mean {snap['mean_batch']:.1f}/batch, "
+          f"offered {args.rate:.0f} q/s, achieved "
+          f"{snap['requests'] / elapsed:.0f} q/s)")
+    print(f"latency p50={snap['latency_p50_ms']:.1f}ms "
+          f"p99={snap['latency_p99_ms']:.1f}ms  queue-wait "
+          f"p50={snap['queue_wait_p50_ms']:.1f}ms  flush "
+          f"p50={snap['flush_p50_ms']:.1f}ms  triggers: "
+          f"full={snap['flush_full']} aged={snap['flush_aged']} "
+          f"deadline={snap['flush_deadline']} drain={snap['flush_drain']}")
+
+
 def _sharded_row_reader(sharded):
     """Global doc id -> packed query row, off the shards' mmaps."""
     import numpy as np
@@ -126,10 +169,16 @@ def _sharded_row_reader(sharded):
     return words_of
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke can actually turn full-size
+    # builds back on (a bare store_true with default=True could not be
+    # disabled from the command line at all).
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrink the arch for a fast smoke run "
+                         "(--no-smoke serves the full-size config)")
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--index", action="store_true",
@@ -137,7 +186,8 @@ def main():
     ap.add_argument("--mode", choices=("exact", "lsh"), default="lsh")
     ap.add_argument("--docs", type=int, default=2048)
     ap.add_argument("--queries", type=int, default=16,
-                    help="queries admitted per batch (--index)")
+                    help="queries admitted per batch (--index); the "
+                         "server's max_batch under --serve")
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--k", type=int, default=128)
     ap.add_argument("--b", type=int, default=8)
@@ -150,6 +200,21 @@ def main():
     ap.add_argument("--device-window", type=int, default=None,
                     help="max device-resident packed-corpus bytes; larger "
                          "corpora stream mmap windows (--index)")
+    ap.add_argument("--serve", action="store_true",
+                    help="drive the continuous-batching SearchServer "
+                         "under open-loop Zipf/Poisson traffic (--index)")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="offered load in queries/s (--serve)")
+    ap.add_argument("--zipf-alpha", type=float, default=1.1,
+                    help="query-popularity Zipf exponent (--serve)")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="micro-batching window: max time the oldest "
+                         "queued request waits before a flush (--serve)")
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
 
     if args.index:

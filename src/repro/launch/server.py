@@ -1,0 +1,345 @@
+"""Continuous-batching search server over the similarity-search index.
+
+The paper's endgame is serving b-bit signatures under real traffic
+(PAPER.md §1, §3: retrieval at 200GB scale); this module is the serving
+spine on top of ``repro.index``: a thread-safe admission queue in front
+of any ``submit``/``flush`` searcher (``IndexSearcher`` or the sharded
+``ShardedIndex`` router), flushed by a background dispatch thread with
+deadline-aware micro-batching -- the queue + worker-thread design of
+production inference servers (cf. MLPerf offline-inference harnesses).
+
+  client threads                     dispatch thread
+  --------------                     ---------------------------------
+  submit(q) ──> admission queue ──>  wait until: batch full
+  (returns a PendingResult)             OR oldest request aged max_delay
+                                        OR a deadline is about to miss
+                                     pop <= max_batch requests
+                                     [router.refresh(): pick up live
+                                      appends via the versioned manifest]
+                                     searcher.submit() x batch; flush()
+                                     resolve PendingResults + stats
+
+Because a flush drains the queue through the *existing* batched
+admission protocol (one fused scan / one candidate union per flush),
+micro-batched results are **bit-identical** to calling ``search()``
+directly on the same queries -- and since every per-query row of the
+exact scan and the LSH rerank is independent of its co-batched rows,
+they are also bit-identical to a single-query ``search`` per request
+(``tests/test_server.py`` pins both).
+
+Live index updates ride the ``repro.index`` lock-file + atomic-manifest
+machinery: a crawler process calls ``ShardedIndex.append`` (directory
+lock, atomic ``.idx`` replace, manifest generation bump) while this
+server keeps flushing; with ``refresh=True`` the dispatch thread
+re-reads the versioned manifest before each flush and swaps in grown
+shards between batches, so every flush serves one consistent corpus
+snapshot.
+
+``ZipfianTraffic`` is the synthetic load model (Zipf-popular query ids,
+Poisson arrivals) behind ``benchmarks/search_serving.py`` and
+``repro.launch.serve --index --serve``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+def _percentile(samples, q: float) -> float:
+    if not samples:
+        return float("nan")
+    return float(np.percentile(np.asarray(samples, np.float64), q))
+
+
+class PendingResult:
+    """Handle for one admitted request; resolved by the dispatch thread."""
+
+    __slots__ = ("t_submit", "deadline", "query", "query_size",
+                 "_event", "_result", "_error", "queue_wait_s", "latency_s")
+
+    def __init__(self, query, query_size, deadline: Optional[float]):
+        self.query = query
+        self.query_size = query_size
+        self.t_submit = time.monotonic()
+        self.deadline = deadline          # absolute monotonic time, or None
+        self.queue_wait_s: Optional[float] = None
+        self.latency_s: Optional[float] = None
+        self._event = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until resolved; returns the per-request ``SearchResult``
+        (one row) or re-raises the batch's failure."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result, error: Optional[BaseException]) -> None:
+        self._result = result
+        self._error = error
+        self.latency_s = time.monotonic() - self.t_submit
+        self._event.set()
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Serving counters; bounded reservoirs feed the percentile snapshot.
+
+    ``queue_wait_s`` is admission -> batch pop, ``flush_s`` is one
+    batch's dispatch+harvest wall clock, ``latency_s`` is admission ->
+    result resolution (what a client observes).
+    """
+
+    requests: int = 0
+    batches: int = 0
+    errors: int = 0
+    deadline_misses: int = 0
+    refreshes: int = 0            # manifest refreshes that changed state
+    flush_full: int = 0           # trigger: queue reached max_batch
+    flush_aged: int = 0           # trigger: oldest request aged max_delay
+    flush_deadline: int = 0       # trigger: a deadline was about to miss
+    flush_drain: int = 0          # trigger: server stopping
+    window: int = 65536
+    queue_wait_s: Deque[float] = dataclasses.field(default=None)  # type: ignore[assignment]
+    flush_s: Deque[float] = dataclasses.field(default=None)       # type: ignore[assignment]
+    latency_s: Deque[float] = dataclasses.field(default=None)     # type: ignore[assignment]
+    batch_sizes: Deque[int] = dataclasses.field(default=None)     # type: ignore[assignment]
+
+    def __post_init__(self):
+        for name in ("queue_wait_s", "flush_s", "latency_s", "batch_sizes"):
+            if getattr(self, name) is None:
+                setattr(self, name, collections.deque(maxlen=self.window))
+
+    def snapshot(self) -> Dict[str, float]:
+        """One consistent dict of counters + p50/p99s (ms)."""
+        out = {"requests": self.requests, "batches": self.batches,
+               "errors": self.errors, "deadline_misses": self.deadline_misses,
+               "refreshes": self.refreshes, "flush_full": self.flush_full,
+               "flush_aged": self.flush_aged,
+               "flush_deadline": self.flush_deadline,
+               "flush_drain": self.flush_drain,
+               "mean_batch": (float(np.mean(self.batch_sizes))
+                              if self.batch_sizes else float("nan"))}
+        for name, samples in (("queue_wait", self.queue_wait_s),
+                              ("flush", self.flush_s),
+                              ("latency", self.latency_s)):
+            out[f"{name}_p50_ms"] = _percentile(samples, 50) * 1e3
+            out[f"{name}_p99_ms"] = _percentile(samples, 99) * 1e3
+        return out
+
+
+class SearchServer:
+    """Deadline-aware micro-batching front end over a searcher.
+
+    ``searcher`` is anything speaking the batched-admission protocol
+    (``IndexSearcher`` or ``ShardedIndex``); all searcher calls happen on
+    the single dispatch thread, so the underlying jax state is never
+    raced.  A flush fires when the queue holds ``max_batch`` requests,
+    when the oldest request has waited ``max_delay_s``, or when a
+    request's deadline minus the estimated flush latency (EWMA of recent
+    flushes) is about to pass.  ``refresh=True`` (default) calls
+    ``searcher.refresh()`` -- when it has one -- before each flush, so a
+    served ``ShardedIndex`` picks up concurrent appends batch by batch.
+    """
+
+    def __init__(self, searcher, *, max_batch: int = 64,
+                 max_delay_s: float = 0.005, topk: int = 10,
+                 mode: str = "exact", refresh: bool = True,
+                 deadline_safety: float = 1.5):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if mode not in ("exact", "lsh"):
+            raise ValueError(f"mode must be 'exact' or 'lsh', got {mode!r}")
+        self.searcher = searcher
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.topk = topk
+        self.mode = mode
+        self.refresh = refresh and hasattr(searcher, "refresh")
+        self.deadline_safety = deadline_safety
+        self.stats = ServerStats()
+        self._queue: Deque[PendingResult] = collections.deque()
+        self._cond = threading.Condition()
+        self._stopping = False
+        self._thread: Optional[threading.Thread] = None
+        self._est_flush_s = max(max_delay_s, 1e-3)   # EWMA, pre-warm guess
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "SearchServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._dispatch_loop,
+                                        daemon=True, name="search-dispatch")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue (remaining requests are flushed) and join."""
+        if self._thread is None:
+            return
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "SearchServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- admission (any thread) -----------------------------------------
+    def submit(self, query, *, query_size: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> PendingResult:
+        """Admit one query row; returns immediately with a handle.
+
+        ``deadline_s`` is relative (seconds from now): the dispatcher
+        tries to flush early enough that the result lands before it.
+        """
+        if self._thread is None:
+            raise RuntimeError("server not started (use `with server:` "
+                               "or call start())")
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        req = PendingResult(query, query_size, deadline)
+        with self._cond:
+            if self._stopping:
+                raise RuntimeError("server is stopping")
+            self._queue.append(req)
+            self._cond.notify_all()
+        return req
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # -- dispatch (the one searcher thread) ------------------------------
+    def _next_due(self, now: float) -> float:
+        """Earliest time the current queue must flush."""
+        oldest = self._queue[0]
+        due = oldest.t_submit + self.max_delay_s
+        margin = self._est_flush_s * self.deadline_safety
+        for r in self._queue:
+            if r.deadline is not None:
+                due = min(due, r.deadline - margin)
+        return due
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._stopping:
+                    self._cond.wait()
+                if not self._queue and self._stopping:
+                    return
+                trigger = "drain" if self._stopping else None
+                while trigger is None:
+                    now = time.monotonic()
+                    if len(self._queue) >= self.max_batch:
+                        trigger = "full"
+                        break
+                    due = self._next_due(now)
+                    if now >= due:
+                        oldest_due = (self._queue[0].t_submit
+                                      + self.max_delay_s)
+                        trigger = "aged" if due >= oldest_due else "deadline"
+                        break
+                    self._cond.wait(timeout=due - now)
+                    if self._stopping:
+                        trigger = "drain"
+                batch = [self._queue.popleft()
+                         for _ in range(min(self.max_batch,
+                                            len(self._queue)))]
+            if batch:
+                self._flush_batch(batch, trigger)
+
+    def _flush_batch(self, batch: List[PendingResult], trigger: str) -> None:
+        t0 = time.monotonic()
+        stats = self.stats
+        setattr(stats, f"flush_{trigger}",
+                getattr(stats, f"flush_{trigger}") + 1)
+        if self.refresh:
+            try:
+                if self.searcher.refresh():
+                    stats.refreshes += 1
+            except Exception:           # keep serving on a failed refresh
+                stats.errors += 1
+        tickets: Dict[int, PendingResult] = {}
+        for r in batch:
+            r.queue_wait_s = t0 - r.t_submit
+            stats.queue_wait_s.append(r.queue_wait_s)
+            try:
+                tickets[self.searcher.submit(
+                    r.query, query_size=r.query_size)] = r
+            except Exception as e:       # a malformed query fails only itself
+                stats.errors += 1
+                r._resolve(None, e)
+        error: Optional[BaseException] = None
+        out: Dict[int, object] = {}
+        if tickets:
+            try:
+                out = self.searcher.flush(self.topk, mode=self.mode)
+            except Exception as e:
+                error = e
+                stats.errors += 1
+        dt = time.monotonic() - t0
+        self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * dt
+        stats.batches += 1
+        stats.flush_s.append(dt)
+        stats.batch_sizes.append(len(batch))
+        now = time.monotonic()
+        for ticket, r in tickets.items():
+            r._resolve(out.get(ticket), error)
+            stats.requests += 1
+            stats.latency_s.append(r.latency_s)
+            if r.deadline is not None and now > r.deadline:
+                stats.deadline_misses += 1
+
+
+# ---------------------------------------------------------------------------
+# Synthetic traffic: Zipf-popular queries, Poisson arrivals
+# ---------------------------------------------------------------------------
+
+class ZipfianTraffic:
+    """Synthetic serving load over an ``n_docs`` corpus.
+
+    Query popularity follows a Zipf law with exponent ``alpha`` over a
+    random permutation of the doc ids (so popular docs are scattered,
+    not clustered at low ids); arrivals are a Poisson process at
+    ``rate_qps``.  Deterministic per seed.
+    """
+
+    def __init__(self, n_docs: int, *, alpha: float = 1.1, seed: int = 0):
+        if n_docs < 1:
+            raise ValueError(f"n_docs must be >= 1, got {n_docs}")
+        self.n_docs = n_docs
+        self.alpha = alpha
+        self._rng = np.random.default_rng(seed)
+        weights = 1.0 / np.arange(1, n_docs + 1, dtype=np.float64) ** alpha
+        self._probs = weights / weights.sum()
+        self._perm = self._rng.permutation(n_docs)
+
+    def ids(self, m: int) -> np.ndarray:
+        """``m`` query doc ids, Zipf-popular."""
+        ranks = self._rng.choice(self.n_docs, size=m, p=self._probs)
+        return self._perm[ranks]
+
+    def arrival_offsets(self, m: int, rate_qps: float) -> np.ndarray:
+        """``m`` monotone arrival times (seconds from start) at the
+        offered load ``rate_qps``."""
+        if rate_qps <= 0:
+            raise ValueError(f"rate_qps must be > 0, got {rate_qps}")
+        gaps = self._rng.exponential(1.0 / rate_qps, size=m)
+        return np.cumsum(gaps)

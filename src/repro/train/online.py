@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.hashing import Hash2U, Hash4U
 from repro.core.oph import OPH
+from repro.data.lockfile import FileLock
 from repro.data.pipeline import (LoaderStats, SignatureStream, prefetch_iter,
                                  read_with_retries)
 from repro.data.sigshard import read_sig_shard, write_sig_shard
@@ -140,6 +141,13 @@ class SignatureCache:
     the jitted SGD step itself), so the host only moves k*b bits per
     example.
 
+    Sharing: a persistent ``cache_dir`` may be shared by several
+    trainers (even across processes) -- populate passes serialize on the
+    directory's ``.lock`` file (``repro.data.lockfile.FileLock``,
+    bounded by ``lock_timeout_s``) and every shard write is atomic, so a
+    reader never maps a truncated shard and sweeps never interleave with
+    another trainer's writes.
+
     Lifecycle: ``ttl_s`` expires shards by file mtime -- stale shard
     files are dropped on populate (leftovers in a shared ``cache_dir``)
     and on replay (a stale tracked shard invalidates the cache, which
@@ -159,7 +167,8 @@ class SignatureCache:
     def __init__(self, stream: SignatureStream, cache_dir: Optional[str] = None,
                  *, prefetch: int = 2, straggler_deadline_s: float = 30.0,
                  max_retries: int = 2, max_cache_bytes: Optional[int] = None,
-                 ttl_s: Optional[float] = None):
+                 ttl_s: Optional[float] = None,
+                 lock_timeout_s: float = 600.0):
         self.stream = stream
         self.b = stream.b
         fam = stream.family
@@ -174,6 +183,7 @@ class SignatureCache:
         self.max_retries = max_retries
         self.max_cache_bytes = max_cache_bytes
         self.ttl_s = ttl_s
+        self.lock_timeout_s = lock_timeout_s
         self.ttl_dropped = 0          # stale shard files removed so far
         self.populated = False
         self.closed = False
@@ -297,6 +307,19 @@ class SignatureCache:
         return _wire_spec(self.b, self.sentinel)[0]
 
     def _populate(self):
+        # the populate pass is serialized across processes sharing this
+        # cache_dir on the directory's lock file (the cross-process
+        # SignatureCache coordination the serving stack relies on): two
+        # trainers can point at one dir and never interleave one's TTL
+        # sweep with the other's shard writes.  Shard writes themselves
+        # are atomic (write_sig_shard: tmp + os.replace), so a replaying
+        # reader racing a later populate only ever maps complete shards.
+        # The lock releases on generator close too (abandoned epochs).
+        with FileLock(os.path.join(self.cache_dir, ".lock"),
+                      timeout_s=self.lock_timeout_s):
+            yield from self._populate_locked()
+
+    def _populate_locked(self):
         # a partially-consumed epoch-0 pass may have written some shards
         # and read some raw bytes already; restart the accounting so
         # replay never sees duplicates and the reduction stays honest

@@ -96,3 +96,7 @@ def test_repeat_must_be_positive(monkeypatch):
 
 def test_search_scaling_registered():
     assert any(name == "search_scaling" for name, _ in bench_run.MODULES)
+
+
+def test_search_serving_registered():
+    assert any(name == "search_serving" for name, _ in bench_run.MODULES)

@@ -478,3 +478,49 @@ def test_blockloop_refuses_out_of_core_corpus(corpus_idx):
     q = jnp.asarray(np.ascontiguousarray(index.words_host[:2]))
     with pytest.raises(ValueError, match="max_device_bytes"):
         searcher.search(q, 5, mode="exact")
+
+
+def test_stream_plan_resident_bytes_within_budget(corpus_idx):
+    """The out-of-core window plan must keep worst-case device-resident
+    corpus bytes (inflight windows x window bytes) within the configured
+    budget -- the old plan floored the window at corpus_block and could
+    hold prefetch+1 windows over budget.  Below two rows' worth the
+    budget is physically unsatisfiable; the plan floors at one row per
+    window and that is the only excused case."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    row_bytes = 4 * meta.words
+    budgets = [2 * row_bytes, 5 * row_bytes, 64 * row_bytes,
+               200 * row_bytes, meta.payload_bytes // 3,
+               meta.payload_bytes // 2]
+    for budget in budgets:
+        s = IndexSearcher(index, backend="interpret", corpus_block=128,
+                          max_device_bytes=budget)
+        assert s.streamed
+        p = s._stream_plan()
+        assert p.resident_bytes <= budget, (
+            f"budget {budget}: {p.inflight} x {p.window_bytes} B resident")
+        assert p.window % p.block == 0 and p.block <= 128
+    # hard floor: less than two rows of budget still yields a legal
+    # (one-row-per-window) plan rather than dividing to zero
+    tiny = IndexSearcher(index, backend="interpret", corpus_block=128,
+                         max_device_bytes=row_bytes)
+    assert tiny._stream_plan().window == 1
+
+
+def test_streamed_tiny_budget_bit_identical(corpus_idx):
+    """Even a budget that shrinks the scan block below corpus_block (the
+    case the old plan violated) returns bit-identical results."""
+    idx_path, meta, _ = corpus_idx
+    index = load_index(idx_path)
+    q = jnp.asarray(np.ascontiguousarray(index.words_host[20:26]))
+    want = IndexSearcher(index, backend="interpret",
+                         corpus_block=128).search(q, 10, mode="exact")
+    row_bytes = 4 * meta.words
+    tight = IndexSearcher(index, backend="interpret", corpus_block=128,
+                          max_device_bytes=40 * row_bytes)
+    plan = tight._stream_plan()
+    assert plan.block < 128                      # budget forced a small block
+    got = tight.search(q, 10, mode="exact")
+    assert np.array_equal(got.indices, want.indices)
+    assert np.array_equal(got.scores, want.scores)

@@ -381,3 +381,52 @@ def test_cache_ttl_sweeps_stale_leftovers_on_populate(shard_paths, tmp_path):
     assert not os.path.exists(leftover)          # past the TTL: swept
     assert os.path.exists(fresh)                 # inside the TTL: kept
     assert cache.ttl_dropped == 1
+
+
+def test_populate_crash_mid_write_leaves_no_partial_shard(
+        shard_paths, tmp_path, monkeypatch):
+    """A crash halfway through a cache-shard write must never publish a
+    truncated sig_*.sig (writes go to a tmp name and os.replace over the
+    final path only when complete) nor leak the tmp file or the dir lock."""
+    import glob
+    import os
+
+    from repro.data import sigshard
+    from repro.data.sigshard import read_sig_shard
+
+    fam = make_family(jax.random.PRNGKey(5), "oph", K, D_BITS)
+    cache_dir = str(tmp_path / "crashy")
+    cache = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=64),
+        cache_dir=cache_dir)
+    real = sigshard._write_payload
+    calls = []
+
+    def crashing(f, words):
+        calls.append(1)
+        if len(calls) == 2:
+            f.write(b"\x00\x01\x02")             # partial garbage, then die
+            raise RuntimeError("simulated crash mid-write")
+        return real(f, words)
+
+    monkeypatch.setattr(sigshard, "_write_payload", crashing)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        for _ in cache:
+            pass
+    visible = sorted(glob.glob(os.path.join(cache_dir, "sig_*.sig")))
+    assert len(visible) == 1                     # only the COMPLETE shard
+    read_sig_shard(visible[0])                   # and it parses
+    assert not glob.glob(os.path.join(cache_dir, "*.tmp.*"))
+    assert not os.path.exists(os.path.join(cache_dir, ".lock"))
+
+    # with the fault gone, a fresh cache over the same dir populates and
+    # replays bit-exact -- the crash left nothing poisonous behind
+    monkeypatch.undo()
+    clean = SignatureCache(
+        SignatureStream(shard_paths, fam, b=B, chunk_size=64),
+        cache_dir=cache_dir)
+    first = [np.asarray(getattr(s, "data", s)) for s, _ in clean]
+    assert clean.populated and len(first) > 1
+    replay = [np.asarray(getattr(s, "data", s)) for s, _ in clean]
+    for a, b_ in zip(first, replay):
+        np.testing.assert_array_equal(a, b_)

@@ -113,3 +113,28 @@ def test_binary_faster_than_text(tmp_path):
     t0 = time.perf_counter(); read_shard_binary(pb[0]); tb = time.perf_counter() - t0
     t0 = time.perf_counter(); read_shard_libsvm(pt[0]); tt = time.perf_counter() - t0
     assert tb < tt  # text parsing is slower
+
+
+@pytest.mark.parametrize("n,chunk_size", [(101, 25), (96, 16), (30, 64)])
+def test_chunk_contents_pinned(tmp_path, n, chunk_size):
+    """Chunk boundaries AND per-row set contents must equal slicing the
+    concatenated shard stream -- pins that the O(n) moving-cursor chunk
+    assembly (no per-chunk list re-copy) changed nothing observable."""
+    sets, labels = _toy_sets(n, seed=3)
+    paths = write_shards(sets, labels, str(tmp_path), n_shards=4)
+    loader = ChunkedLoader(paths, chunk_size=chunk_size, prefetch=0,
+                           lane_multiple=8)
+    chunks = list(loader)
+    sizes = [c.n for c in chunks]
+    assert sizes[:-1] == [chunk_size] * (len(chunks) - 1)
+    assert sum(sizes) == n
+    pos = 0
+    for c in chunks:
+        idx = np.asarray(c.indices)
+        mask = np.asarray(c.mask)
+        for row in range(c.n):
+            got = np.sort(idx[row][mask[row]])
+            np.testing.assert_array_equal(got, np.sort(sets[pos + row]))
+        np.testing.assert_array_equal(np.asarray(c.labels),
+                                      labels[pos:pos + c.n])
+        pos += c.n

@@ -219,3 +219,42 @@ def test_merge_topk_tie_break_and_padding():
     np.testing.assert_array_equal(out.indices, [[1, 0, -1, -1, -1]])
     with pytest.raises(ValueError):
         merge_topk([], [], 3)
+
+
+def test_merge_topk_all_empty_shards():
+    """Every shard empty (e.g. LSH with zero candidates anywhere): the
+    merge yields pure padding, not garbage ids."""
+    empty = SearchResult(np.full((2, 3), -1),
+                         np.full((2, 3), -np.inf, np.float32))
+    out = merge_topk([empty, empty, empty], [0, 10, 20], 3)
+    np.testing.assert_array_equal(out.indices, np.full((2, 3), -1))
+    assert np.all(np.isneginf(out.scores))
+
+
+def test_merge_topk_topk_exceeds_total_docs():
+    """topk larger than ALL shards' real docs combined: valid docs first
+    (score order), then -1/-inf padding out to topk."""
+    r0 = SearchResult(np.array([[1, 0, -1]]),
+                      np.array([[0.9, 0.4, -np.inf]], np.float32))
+    r1 = SearchResult(np.array([[0, -1, -1]]),
+                      np.array([[0.6, -np.inf, -np.inf]], np.float32))
+    out = merge_topk([r0, r1], [0, 10], 8)
+    np.testing.assert_array_equal(out.indices,
+                                  [[1, 10, 0, -1, -1, -1, -1, -1]])
+    np.testing.assert_array_equal(
+        out.scores[0, :3], np.array([0.9, 0.6, 0.4], np.float32))
+    assert np.all(np.isneginf(out.scores[0, 3:]))
+
+
+def test_merge_topk_tie_run_spans_three_shards():
+    """A tie run crossing every shard boundary resolves in ascending
+    global-id order -- lax.top_k's rule over the concatenated corpus."""
+    tie = np.float32(0.5)
+    r0 = SearchResult(np.array([[0, 2]]), np.array([[tie, tie]], np.float32))
+    r1 = SearchResult(np.array([[1, 3]]), np.array([[tie, tie]], np.float32))
+    r2 = SearchResult(np.array([[0, 4]]), np.array([[tie, tie]], np.float32))
+    out = merge_topk([r0, r1, r2], [0, 10, 20], 6)
+    # per-shard results keep ascending local id inside the tie run, so
+    # the merge must produce ascending GLOBAL ids across all shards
+    np.testing.assert_array_equal(out.indices, [[0, 2, 11, 13, 20, 24]])
+    assert np.all(out.scores == tie)

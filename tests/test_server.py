@@ -1,0 +1,371 @@
+"""Continuous-batching SearchServer + lock-file coordination + live
+appends under readers: the PR-6 serving-path promises.
+
+  * micro-batched server results bit-identical to direct ``search()``
+    (and the batch triggers: full, aged, deadline, drain),
+  * ``FileLock`` mutual exclusion, reentrancy, timeout, stale break,
+  * flush racing ``ShardedIndex.append``: every result consistent with
+    the pre- OR post-append corpus, never a torn mix; a second router
+    picks the append up via the manifest generation,
+  * ``--smoke``/``--no-smoke`` actually both parse (the old store_true
+    default=True could never be disabled),
+  * ``ZipfianTraffic`` determinism and shape.
+"""
+
+import glob
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.oph import OPH
+from repro.data.lockfile import FileLock, LockTimeout
+from repro.data.pipeline import make_sharded_dataset
+from repro.data.preprocess import preprocess_shards
+from repro.data.synthetic import DatasetSpec
+from repro.index import (IndexSearcher, build_index, build_sharded,
+                         choose_band_config, load_index, load_sharded)
+from repro.launch.serve import build_parser
+from repro.launch.server import SearchServer, ServerStats, ZipfianTraffic
+
+K, S, B = 128, 16, 8
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    """Synthetic corpus as .sig shards + one single-index searcher."""
+    tmp = str(tmp_path_factory.mktemp("server_corpus"))
+    spec = DatasetSpec("servertest", n=260, D=1 << S, avg_nnz=48,
+                       n_prototypes=6, overlap=0.8, seed=4)
+    raw = make_sharded_dataset(spec, os.path.join(tmp, "raw"), n_shards=4)
+    fam = OPH.create(jax.random.PRNGKey(1), K, S, "2u", "rotation")
+    preprocess_shards(raw, os.path.join(tmp, "sig"), fam, b=B,
+                      chunk_size=64, loader_kwargs={"lane_multiple": 8})
+    sig_paths = sorted(glob.glob(os.path.join(tmp, "sig", "*.sig")))
+    assert len(sig_paths) >= 4
+    cfg = choose_band_config(K, B, threshold=0.5)
+    idx_path = os.path.join(tmp, "single.idx")
+    build_index(sig_paths, idx_path, cfg)
+    return tmp, sig_paths, cfg, idx_path
+
+
+@pytest.fixture(scope="module")
+def searcher(corpus):
+    _, _, _, idx_path = corpus
+    return IndexSearcher(load_index(idx_path), backend="interpret",
+                         corpus_block=128)
+
+
+# ---------------------------------------------------------------------------
+# FileLock
+# ---------------------------------------------------------------------------
+
+def test_filelock_mutual_exclusion_and_timeout(tmp_path):
+    path = str(tmp_path / "x.lock")
+    a = FileLock(path)
+    b = FileLock(path, timeout_s=0.05, poll_s=0.005)
+    with a:
+        assert a.held and os.path.exists(path)
+        with pytest.raises(LockTimeout):
+            b.acquire()
+    assert not os.path.exists(path)              # released -> removed
+    with b:                                      # free again
+        assert b.held
+
+
+def test_filelock_reentrant(tmp_path):
+    lock = FileLock(str(tmp_path / "r.lock"))
+    with lock:
+        with lock:                               # same instance re-enters
+            assert lock.held
+        assert lock.held                         # inner exit keeps it
+    assert not lock.held
+
+
+def test_filelock_breaks_stale(tmp_path):
+    path = str(tmp_path / "dead.lock")
+    with open(path, "w") as f:
+        f.write("999999 0")                      # a crashed holder
+    old = time.time() - 3600
+    os.utime(path, (old, old))
+    lock = FileLock(path, timeout_s=1.0, poll_s=0.01, stale_s=60.0)
+    with lock:                                   # broke the stale file
+        assert lock.held
+    # without stale breaking the same file times out
+    with open(path, "w") as f:
+        f.write("999999 0")
+    os.utime(path, (old, old))
+    with pytest.raises(LockTimeout):
+        FileLock(path, timeout_s=0.05, poll_s=0.005).acquire()
+
+
+def test_filelock_released_on_generator_abandon(tmp_path, corpus):
+    """Abandoning a SignatureCache populate pass mid-epoch must release
+    the cache dir's lock (generator close runs the with-block exit)."""
+    from repro.data.pipeline import SignatureStream
+    from repro.train.online import SignatureCache, make_family
+    fam = make_family(jax.random.PRNGKey(0), "oph", K, S)
+    raw = sorted(glob.glob(os.path.join(corpus[0], "raw", "*")))
+    cache_dir = str(tmp_path / "shared")
+    cache = SignatureCache(SignatureStream(raw, fam, b=B, chunk_size=64),
+                           cache_dir=cache_dir)
+    it = iter(cache)
+    next(it)                                     # lock held mid-pass
+    assert os.path.exists(os.path.join(cache_dir, ".lock"))
+    it.close()
+    assert not os.path.exists(os.path.join(cache_dir, ".lock"))
+    # a second trainer sharing the dir can now populate immediately
+    other = SignatureCache(SignatureStream(raw, fam, b=B, chunk_size=64),
+                           cache_dir=cache_dir, lock_timeout_s=1.0)
+    assert len(list(other)) > 0 and other.populated
+
+
+# ---------------------------------------------------------------------------
+# SearchServer
+# ---------------------------------------------------------------------------
+
+def test_server_bit_identical_to_direct_search(searcher):
+    """Micro-batched results == direct search(), row for row."""
+    n = searcher.index.n
+    picks = [0, 3, n // 2, n - 1, 7, n // 3]
+    rows = [np.asarray(searcher.index.words_host[i]) for i in picks]
+    direct = searcher.search(np.stack(rows), 5, mode="exact")
+    with SearchServer(searcher, max_batch=4, max_delay_s=0.01,
+                      topk=5) as srv:
+        handles = [srv.submit(r) for r in rows]
+        results = [h.result(timeout=60.0) for h in handles]
+    for j, res in enumerate(results):
+        assert np.array_equal(res.indices[0], direct.indices[j])
+        assert np.array_equal(res.scores[0], direct.scores[j])
+    assert srv.stats.requests == len(picks)
+    assert srv.stats.batches >= 2                # max_batch=4 over 6 reqs
+
+
+def test_server_full_batch_trigger(searcher):
+    """With a huge delay window, only a full queue can flush."""
+    rows = [np.asarray(searcher.index.words_host[i]) for i in range(4)]
+    with SearchServer(searcher, max_batch=2, max_delay_s=30.0,
+                      topk=3) as srv:
+        handles = [srv.submit(r) for r in rows]
+        t0 = time.monotonic()
+        for h in handles:
+            h.result(timeout=60.0)
+        assert time.monotonic() - t0 < 25.0      # did not wait out the delay
+    assert srv.stats.flush_full >= 1
+    assert srv.stats.flush_aged == 0
+
+
+def test_server_aged_trigger_flushes_partial_batch(searcher):
+    """A lone request flushes after max_delay_s, not never."""
+    row = np.asarray(searcher.index.words_host[1])
+    with SearchServer(searcher, max_batch=64, max_delay_s=0.05,
+                      topk=3) as srv:
+        h = srv.submit(row)
+        h.result(timeout=60.0)
+    assert srv.stats.flush_aged == 1
+    assert srv.stats.flush_full == 0
+    assert h.queue_wait_s >= 0.04                # sat out the delay window
+
+
+def test_server_deadline_trigger(searcher):
+    """An explicit deadline flushes before the aging window would."""
+    row = np.asarray(searcher.index.words_host[2])
+    with SearchServer(searcher, max_batch=64, max_delay_s=30.0,
+                      topk=3) as srv:
+        t0 = time.monotonic()
+        h = srv.submit(row, deadline_s=0.25)
+        h.result(timeout=60.0)
+        assert time.monotonic() - t0 < 25.0
+    assert srv.stats.flush_deadline == 1
+
+
+def test_server_drains_on_stop(searcher):
+    """stop() flushes whatever is queued instead of dropping it."""
+    rows = [np.asarray(searcher.index.words_host[i]) for i in (1, 2, 3)]
+    srv = SearchServer(searcher, max_batch=64, max_delay_s=30.0,
+                       topk=3).start()
+    handles = [srv.submit(r) for r in rows]
+    srv.stop()
+    for h in handles:
+        assert h.done()
+        assert h.result(timeout=0).indices.shape == (1, 3)
+    assert srv.stats.flush_drain >= 1
+    with pytest.raises(RuntimeError):
+        srv.submit(rows[0])                      # stopped server rejects
+
+
+def test_server_bad_query_fails_only_itself(searcher):
+    """A malformed row errors its own handle; co-batched queries still
+    get bit-identical results."""
+    good = np.asarray(searcher.index.words_host[5])
+    direct = searcher.search(good[None, :], 3, mode="exact")
+    with SearchServer(searcher, max_batch=2, max_delay_s=30.0,
+                      topk=3) as srv:
+        h_bad = srv.submit(np.zeros(3, np.uint32))   # wrong word count
+        h_good = srv.submit(good)
+        res = h_good.result(timeout=60.0)
+        with pytest.raises(ValueError):
+            h_bad.result(timeout=60.0)
+    assert np.array_equal(res.indices, direct.indices)
+    assert np.array_equal(res.scores, direct.scores)
+    assert srv.stats.errors == 1
+
+
+def test_server_requires_start():
+    with pytest.raises(RuntimeError, match="not started"):
+        SearchServer(object()).submit(np.zeros(1))
+
+
+def test_server_stats_snapshot(searcher):
+    rows = [np.asarray(searcher.index.words_host[i]) for i in range(3)]
+    with SearchServer(searcher, max_batch=3, max_delay_s=0.01,
+                      topk=3) as srv:
+        for h in [srv.submit(r) for r in rows]:
+            h.result(timeout=60.0)
+    snap = srv.stats.snapshot()
+    assert snap["requests"] == 3 and snap["errors"] == 0
+    for key in ("latency_p50_ms", "latency_p99_ms", "queue_wait_p50_ms",
+                "flush_p50_ms", "mean_batch"):
+        assert np.isfinite(snap[key]), key
+    assert snap["latency_p99_ms"] >= snap["latency_p50_ms"]
+    assert len(srv.stats.queue_wait_s) == 3      # one sample per request
+
+
+def test_server_stats_reservoir_bounded():
+    stats = ServerStats(window=4)
+    for i in range(10):
+        stats.latency_s.append(float(i))
+    assert list(stats.latency_s) == [6.0, 7.0, 8.0, 9.0]
+
+
+# ---------------------------------------------------------------------------
+# Live appends under readers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def growing_router(corpus, tmp_path):
+    tmp, sig_paths, cfg, _ = corpus
+    shard_dir = str(tmp_path / "growing")
+    build_sharded(sig_paths[:3], shard_dir, cfg, n_shards=2)
+    router = load_sharded(shard_dir, backend="interpret", corpus_block=64)
+    return router, sig_paths[3:]
+
+
+def test_search_racing_append_never_torn(growing_router):
+    """Concurrent search() calls during append() return results equal to
+    the pre-append OR the post-append corpus -- never a torn mix."""
+    router, extra = growing_router
+    n0 = router.n
+    q = np.ascontiguousarray(
+        router.searchers[0].index.words_host[[0, 3, 9, 17]])
+    pre = router.search(q, 5, mode="exact")
+    results, errors = [], []
+
+    def reader():
+        try:
+            for _ in range(10):
+                results.append(router.search(q, 5, mode="exact"))
+        except Exception as e:               # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    time.sleep(0.02)
+    router.append(extra)
+    t.join()
+    assert not errors
+    assert router.n > n0
+    post = router.search(q, 5, mode="exact")
+    assert not (np.array_equal(pre.indices, post.indices)
+                and np.array_equal(pre.scores, post.scores))
+    for res in results:
+        matches_pre = (np.array_equal(res.indices, pre.indices)
+                       and np.array_equal(res.scores, pre.scores))
+        matches_post = (np.array_equal(res.indices, post.indices)
+                        and np.array_equal(res.scores, post.scores))
+        assert matches_pre or matches_post
+
+
+def test_server_flush_picks_up_append_via_refresh(growing_router):
+    """Flushes before the append serve the old corpus, flushes after it
+    serve the grown corpus -- the server's per-flush refresh() is the
+    reader side of the generation-versioned manifest."""
+    router, extra = growing_router
+    q_rows = [np.asarray(router.searchers[0].index.words_host[i])
+              for i in (1, 6, 11)]
+    pre = router.search(np.stack(q_rows), 5, mode="exact")
+    with SearchServer(router, max_batch=len(q_rows), max_delay_s=0.01,
+                      topk=5) as srv:
+        first = [srv.submit(r) for r in q_rows]
+        first = [h.result(timeout=60.0) for h in first]
+        gen0 = router.generation
+        router.append(extra)
+        assert router.generation == gen0 + 1
+        second = [srv.submit(r) for r in q_rows]
+        second = [h.result(timeout=60.0) for h in second]
+    post = router.search(np.stack(q_rows), 5, mode="exact")
+    for j, res in enumerate(first):
+        assert np.array_equal(res.indices[0], pre.indices[j])
+        assert np.array_equal(res.scores[0], pre.scores[j])
+    for j, res in enumerate(second):
+        assert np.array_equal(res.indices[0], post.indices[j])
+        assert np.array_equal(res.scores[0], post.scores[j])
+
+
+def test_second_router_picks_up_append(growing_router, tmp_path):
+    """Two routers over one shard dir model two processes: an append in
+    one is visible to the other after refresh(), via the generation."""
+    router, extra = growing_router
+    other = load_sharded(router.manifest_dir, backend="interpret",
+                         corpus_block=64)
+    assert other.generation == router.generation
+    router.append(extra)
+    assert other.n < router.n                    # not yet refreshed
+    assert other.refresh() is True
+    assert other.n == router.n
+    assert other.generation == router.generation
+    assert other.refresh() is False              # idempotent
+    q = np.ascontiguousarray(
+        router.searchers[0].index.words_host[[2, 5]])
+    a = router.search(q, 5, mode="exact")
+    b = other.search(q, 5, mode="exact")
+    assert np.array_equal(a.indices, b.indices)
+    assert np.array_equal(a.scores, b.scores)
+
+
+# ---------------------------------------------------------------------------
+# CLI + traffic model
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_smoke_flag_both_ways():
+    """--smoke defaults on, and --no-smoke can actually turn it off (the
+    old action="store_true", default=True made that impossible)."""
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is True
+    assert ap.parse_args(["--smoke"]).smoke is True
+    assert ap.parse_args(["--no-smoke"]).smoke is False
+    args = ap.parse_args(["--index", "--serve", "--rate", "123",
+                          "--max-delay-ms", "2.5"])
+    assert args.serve and args.rate == 123.0 and args.max_delay_ms == 2.5
+    assert ap.parse_args([]).serve is False
+
+
+def test_zipfian_traffic_deterministic_and_skewed():
+    a = ZipfianTraffic(500, alpha=1.2, seed=7)
+    b = ZipfianTraffic(500, alpha=1.2, seed=7)
+    ids_a, ids_b = a.ids(400), b.ids(400)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    assert ids_a.min() >= 0 and ids_a.max() < 500
+    # Zipf skew: the most popular id dwarfs the uniform expectation
+    top = np.bincount(ids_a).max()
+    assert top > 3 * (400 / 500)
+    arr = a.arrival_offsets(100, rate_qps=1000.0)
+    assert arr.shape == (100,) and np.all(np.diff(arr) > 0)
+    assert 0.02 < arr[-1] < 1.0                  # ~100/1000 s, loose bounds
+    with pytest.raises(ValueError):
+        a.arrival_offsets(5, rate_qps=0.0)
+    with pytest.raises(ValueError):
+        ZipfianTraffic(0)
