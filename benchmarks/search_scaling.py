@@ -10,11 +10,14 @@ The PR-5 serving claims, measured end to end on synthetic corpora:
   * a successful out-of-core run: corpus payload bytes strictly greater
     than the configured device window, block windows streamed off the
     mmap'd ``.idx`` through the double-buffered H2D pipeline,
-  * router q/s vs shard count, with the merged top-k checked
-    bit-identical to the single-index search.
+  * router q/s vs shard count -- the sequential fan-out AND (when more
+    than one device is visible) the mesh-parallel ``shard_map`` dispatch
+    with round-robin shard placement -- each checked bit-identical to
+    the single-index search.
 
 ``--json PATH`` writes the rows as a JSON artifact (uploaded by the
-slow-tier CI job next to ``search_index.json``).
+slow-tier CI job next to ``search_index.json``; the CI step forces 8
+host devices via XLA_FLAGS so the mesh rows are populated).
 """
 
 from __future__ import annotations
@@ -23,8 +26,18 @@ import argparse
 import glob
 import json
 import os
+import sys
 import tempfile
 import time
+
+# Force multiple host devices for the mesh-dispatch rows.  Must land
+# before jax initialises; respect an explicit setting (CI) and never
+# fight an already-imported jax (e.g. when run via a driver script).
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +56,7 @@ K, B = 128, 8
 N_QUERIES = 16
 TOPK = 10
 CORPUS_SIZES = (1024, 4096)
-SHARD_COUNTS = (2, 4)
+SHARD_COUNTS = (2, 4, 8)
 CORPUS_BLOCK = 512
 REPEATS = 3
 
@@ -61,8 +74,10 @@ def _build_corpus(tmp: str, n: int):
                       densify="rotation")
     raw = make_sharded_dataset(spec, os.path.join(tmp, f"raw{n}"),
                                n_shards=8)
+    # chunk small enough that every corpus yields >= 8 .sig files, so
+    # the largest SHARD_COUNTS row is buildable (file-granularity split)
     preprocess_shards(raw, os.path.join(tmp, f"sig{n}"), fam, b=B,
-                      chunk_size=max(128, n // 8),
+                      chunk_size=max(64, n // 16),
                       loader_kwargs={"lane_multiple": 8})
     return sorted(glob.glob(os.path.join(tmp, f"sig{n}", "*.sig")))
 
@@ -130,7 +145,15 @@ def run() -> list[Row]:
                                      index.meta.payload_bytes > window
                                      and same_stream)}))
 
+                n_dev = len(jax.devices())
+                mesh = None
+                if n_dev > 1:
+                    from repro.launch.mesh import make_debug_mesh
+                    mesh = make_debug_mesh(n_dev, axes=("data",))
                 for n_shards in SHARD_COUNTS:
+                    if n_shards > len(sig_paths):
+                        # splits are at .sig-file granularity
+                        continue
                     shard_dir = os.path.join(tmp, f"shards{n}_{n_shards}")
                     t0 = time.perf_counter()
                     build_sharded(sig_paths, shard_dir, cfg,
@@ -142,15 +165,35 @@ def run() -> list[Row]:
                     res = router.search(queries, TOPK)
                     identical = (np.array_equal(res.indices, ref.indices)
                                  and np.array_equal(res.scores, ref.scores))
-                    rows.append((f"scaling/router_s{n_shards}_n{n}",
+                    rows.append((f"scaling/router_seq_s{n_shards}_n{n}",
                                  1e6 / qps_router, {
                                      "docs": n, "shards": n_shards,
+                                     "dispatch": "sequential",
                                      "queries_per_s": round(qps_router, 1),
                                      "build_s": round(t_build, 2),
                                      "bit_identical": bool(identical),
                                      "acceptance": "merged top-k == "
                                                    "single-index top-k",
                                      "ok": bool(identical)}))
+                    if mesh is None:
+                        continue
+                    mrouter = load_sharded(shard_dir, mesh=mesh,
+                                           corpus_block=CORPUS_BLOCK)
+                    qps_mesh = _median_qps(mrouter, queries)
+                    mres = mrouter.search(queries, TOPK)
+                    m_ident = (np.array_equal(mres.indices, ref.indices)
+                               and np.array_equal(mres.scores, ref.scores))
+                    rows.append((f"scaling/router_mesh_s{n_shards}_n{n}",
+                                 1e6 / qps_mesh, {
+                                     "docs": n, "shards": n_shards,
+                                     "dispatch": "mesh", "devices": n_dev,
+                                     "queries_per_s": round(qps_mesh, 1),
+                                     "qps_vs_sequential": round(
+                                         qps_mesh / qps_router, 3),
+                                     "bit_identical": bool(m_ident),
+                                     "acceptance": "shard_map top-k == "
+                                                   "single-index top-k",
+                                     "ok": bool(m_ident)}))
     return rows
 
 

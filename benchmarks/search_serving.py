@@ -167,7 +167,8 @@ def run() -> list[Row]:
             for sig in extra_sigs[:N_APPEND_SHARDS]:
                 if stop.is_set():
                     return
-                appended.append(router.append([sig]).n)
+                router.append([sig])
+                appended.append(router.n)
                 time.sleep(0.02)
 
         t = threading.Thread(target=appender)

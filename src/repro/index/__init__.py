@@ -22,9 +22,13 @@ preprocessing and learning stacks already produce:
                 LSH candidate generation + kernel rerank, behind one
                 API, with batched query admission.
   router.py  -- ``ShardedIndex``: fan a query batch across shard
-                searchers, merge per-shard top-k bit-identically to a
-                single-index search; ``load_sharded`` + incremental
-                ``append``.
+                searchers (sequential async dispatch, or ONE
+                ``shard_map`` computation over the mesh's "data"-axis
+                devices with round-robin shard placement), merge
+                per-shard top-k bit-identically to a single-index
+                search; ``ShardClient`` RPC seam; ``load_sharded`` +
+                incremental ``append`` with budgeted spill into new
+                shards.
 
 The scoring hot path is ``repro.kernels.hamming.packed_match`` -- a
 Pallas kernel registered in the SignatureEngine backend registry
@@ -40,12 +44,14 @@ from repro.index.builder import (IndexMeta, SigIndex, append_index,
                                  build_sharded, load_index,
                                  merge_band_tables, read_index_meta)
 from repro.index.query import IndexSearcher, SearchResult, resemblance_scores
-from repro.index.router import ShardedIndex, load_sharded, merge_topk
+from repro.index.router import (LocalShardClient, ShardClient, ShardedIndex,
+                                load_sharded, merge_topk)
 
 __all__ = [
-    "BandingConfig", "IndexMeta", "IndexSearcher", "SearchResult",
-    "ShardedIndex", "SigIndex", "append_index", "band_keys_from_codes",
-    "band_keys_packed", "build_band_tables", "build_index", "build_sharded",
+    "BandingConfig", "IndexMeta", "IndexSearcher", "LocalShardClient",
+    "SearchResult", "ShardClient", "ShardedIndex", "SigIndex",
+    "append_index", "band_keys_from_codes", "band_keys_packed",
+    "build_band_tables", "build_index", "build_sharded",
     "choose_band_config", "load_index", "load_sharded", "merge_band_tables",
     "merge_topk", "read_index_meta", "resemblance_scores", "s_curve",
 ]

@@ -263,7 +263,7 @@ def _check_set_sizes(set_sizes, n: int) -> Optional[np.ndarray]:
 
 def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
                 *, set_sizes: Optional[np.ndarray] = None,
-                s: int = 0) -> IndexMeta:
+                s: int = 0, atomic: bool = False) -> IndexMeta:
     """Packed ``.sig`` shards -> one ``.idx`` file.
 
     The corpus is never unpacked on the host: shard payloads are
@@ -271,7 +271,11 @@ def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
     device (``band_keys_packed``).  ``set_sizes`` (original nonzero
     counts per document, same order as the shards) and ``s`` (universe
     bits) are optional -- when present, queries get the exact Theorem-1
-    debiasing constants instead of the sparse-limit ones.
+    debiasing constants instead of the sparse-limit ones.  ``atomic``
+    writes to a same-directory temp name and ``os.replace``s it over
+    ``out_path`` only when complete, so a crash mid-build never leaves a
+    torn ``.idx`` at the published name (how ``ShardedIndex.append``
+    publishes spilled shards under live readers).
     """
     # shard payloads stay memory-mapped: band keys (small) are computed
     # per shard on device, and the payload section is streamed through
@@ -293,7 +297,12 @@ def build_index(sig_paths: Sequence[str], out_path: str, cfg: BandingConfig,
               "bucket_offsets": bucket_offsets, "postings": postings}
     if set_sizes is not None:
         arrays["set_sizes"] = set_sizes
+    dest = out_path
+    if atomic:
+        out_path = f"{dest}.tmp.{os.getpid()}"
     _write_index(out_path, meta, arrays, shard_words)
+    if atomic:
+        os.replace(out_path, dest)
     return meta
 
 

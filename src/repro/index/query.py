@@ -211,6 +211,48 @@ def _exact_scan(qwords, corpus, best_s, best_i, id_start, q_sizes, doc_sizes,
     return jax.lax.fori_loop(0, n_blocks, body, (best_s, best_i))
 
 
+def exact_scan_ids(qwords, corpus, ids, q_sizes, doc_sizes, *, block, k, b,
+                   code_bits, sentinel, backend, blk_q, blk_n, blk_k, D,
+                   topk):
+    """Blocked exact scan over a corpus slice carrying *explicit* global
+    doc ids (-1 marks a padding row) -- the per-device body of the mesh
+    fan-out (``repro.index.router``).
+
+    Unlike ``_exact_scan``, row identity comes from the ``ids`` operand
+    rather than ``id_start + position``: the mesh dispatcher stacks the
+    shards assigned to one device (round-robin placement interleaves
+    non-adjacent global ranges) into a single padded corpus whose rows
+    are in ascending-global-id order per device, so the in-jit
+    ``lax.top_k`` tie rule still resolves to the lowest global id within
+    the device.  Not jitted here: callers trace it inside their own
+    ``shard_map``/``jit``.
+    """
+    q = qwords.shape[0]
+    n_blocks = corpus.shape[0] // block
+    best_s = jnp.full((q, topk), -jnp.inf, jnp.float32)
+    best_i = jnp.full((q, topk), -1, jnp.int32)
+
+    def body(t, carry):
+        best_s, best_i = carry
+        cblk = jax.lax.dynamic_slice_in_dim(corpus, t * block, block, axis=0)
+        idblk = jax.lax.dynamic_slice_in_dim(ids, t * block, block, axis=0)
+        out = _packed_match_run(qwords, cblk, k=k, code_bits=code_bits,
+                                sentinel=sentinel, backend=backend,
+                                blk_q=blk_q, blk_n=blk_n, blk_k=blk_k)
+        matches, both_empty = out if sentinel else (out, None)
+        if doc_sizes is not None:
+            dsz = jax.lax.dynamic_slice_in_dim(doc_sizes, t * block, block,
+                                               axis=0)
+            sc = resemblance_scores(matches, both_empty, k, b,
+                                    query_sizes=q_sizes, doc_sizes=dsz, D=D)
+        else:
+            sc = resemblance_scores(matches, both_empty, k, b)
+        sc = jnp.where(idblk[None, :] >= 0, sc, -jnp.inf)
+        return _topk_merge(best_s, best_i, sc, idblk)
+
+    return jax.lax.fori_loop(0, n_blocks, body, (best_s, best_i))
+
+
 class _BatchedAdmission:
     """The submit/flush batched-admission protocol, shared by
     ``IndexSearcher`` and the sharded router
@@ -286,12 +328,16 @@ class IndexSearcher(_BatchedAdmission):
                  corpus_block: int = 4096, blocks: Optional[dict] = None,
                  max_device_bytes: Optional[int] = None,
                  exact_impl: str = "fused", lsh_batch: Optional[int] = None,
-                 stream_prefetch: int = 2):
+                 stream_prefetch: int = 2,
+                 device: Optional[jax.Device] = None):
         if exact_impl not in ("fused", "blockloop"):
             raise ValueError(f"exact_impl must be 'fused' or 'blockloop', "
                              f"got {exact_impl!r}")
         self.index = index
         self.backend = backend
+        # pin this searcher's corpus + kernel work to one device (the
+        # sharded router's per-shard placement); None = default device
+        self.device = device
         self.blocks = blocks
         self.corpus_block = min(corpus_block, max(index.n, 1))
         self.max_device_bytes = max_device_bytes
@@ -472,6 +518,12 @@ class IndexSearcher(_BatchedAdmission):
         return lambda: self._pad_result(best_i, best_s, q, topk, kk)
 
     def _exact(self, qwords, topk: int, q_sizes):
+        if self.streamed and self.device is not None:
+            raise ValueError(
+                "a device-pinned searcher cannot stream the exact scan "
+                "(the H2D pipeline's producer thread places windows on "
+                "the default device); raise max_device_bytes or drop the "
+                "placement")
         if self.exact_impl == "blockloop":
             if self.streamed:
                 raise ValueError(
@@ -574,7 +626,11 @@ class IndexSearcher(_BatchedAdmission):
         Returns a zero-arg harvest callable producing the
         ``SearchResult``.  The sharded router dispatches every shard
         before harvesting any, so shard i+1's candidate generation and
-        kernel launches overlap shard i's device work.  ``_qkeys``
+        kernel launches overlap shard i's device work.  With ``device``
+        set, the dispatch runs under that device (queries are moved
+        there, the corpus uploads there, and the kernel + top-k execute
+        there), so searchers placed on distinct devices by the router's
+        mesh placement genuinely run in parallel.  ``_qkeys``
         (router-internal) passes precomputed band keys so the fan-out
         computes them once per batch, not once per shard.
         """
@@ -582,6 +638,16 @@ class IndexSearcher(_BatchedAdmission):
             raise ValueError(f"topk must be >= 1, got {topk}")
         qwords = _query_words(queries, self.index.spec)
         q_sizes = None if query_sizes is None else jnp.asarray(query_sizes)
+        if self.device is not None:
+            with jax.default_device(self.device):
+                qwords = jax.device_put(qwords, self.device)
+                if q_sizes is not None:
+                    q_sizes = jax.device_put(q_sizes, self.device)
+                return self._dispatch_mode(qwords, topk, mode, q_sizes,
+                                           _qkeys)
+        return self._dispatch_mode(qwords, topk, mode, q_sizes, _qkeys)
+
+    def _dispatch_mode(self, qwords, topk: int, mode: str, q_sizes, _qkeys):
         if mode == "exact":
             return self._exact(qwords, topk, q_sizes)
         if mode == "lsh":

@@ -6,31 +6,47 @@ contiguous-doc-range shards; this module serves them as one logical
 index:
 
   * ``ShardedIndex``  -- per-shard ``IndexSearcher``s + the global doc-id
-    offsets.  ``search`` fans the query batch out (every shard's fused
-    exact scan / LSH rerank dispatches before any result is harvested --
-    jax's async dispatch overlaps the shards on one device and is the
-    seam for per-shard devices/hosts later), then ``merge_topk`` folds
-    the per-shard results.
-  * ``merge_topk``    -- stable merge of per-shard (scores, local ids):
-    scores are computed by the same kernel path on every shard, shards
-    are concatenated in ascending-global-id order, and ties break to the
-    earliest position -- exactly ``lax.top_k``'s tie rule over the whole
-    corpus, so the merged top-k (ids AND scores) is bit-identical to a
-    single-index search over the same documents.
+    offsets, reached through a transport-agnostic ``ShardClient`` seam.
+    ``search`` fans the query batch out, then ``merge_topk`` folds the
+    per-shard results.  Two fan-out dispatchers:
+
+      - ``sequential``: every shard's fused exact scan / LSH rerank
+        dispatches before any result is harvested -- jax's async
+        dispatch overlaps the shards, on one device or (with a mesh)
+        on each shard's placed device.
+      - ``mesh``: the exact scan runs as ONE ``shard_map``-dispatched
+        computation per flush.  Shards are placed round-robin on the
+        devices of the mesh's ``"data"`` axis
+        (``repro.sharding.rules.place_shards``), each device scans its
+        stacked shards with a per-device running top-k carried in-jit,
+        and the per-device ``(best_s, best_i)`` are gathered across the
+        mesh and folded through the same ``merge_topk`` rule -- adding
+        devices divides the scan, instead of adding per-shard latency.
+
+  * ``merge_topk``    -- lexicographic (descending score, ascending
+    global id) fold of per-shard (scores, local ids): exactly
+    ``lax.top_k``'s tie rule over the whole corpus, so the merged top-k
+    (ids AND scores) is bit-identical to a single-index search over the
+    same documents, regardless of how the corpus was partitioned or in
+    what order partial results arrive.
   * ``load_sharded``  -- read ``manifest.json`` + shards from a
     ``build_sharded`` output directory.
 
 Live growth under readers: ``ShardedIndex.append`` extends the LAST
-shard via ``repro.index.builder.append_index`` (later shards would shift
-global ids) under the directory's lock file (``sharded_lock``), rewrites
-the manifest atomically with a bumped ``generation``, and swaps the
-router's (searchers, offsets) state in one assignment -- a concurrently
-running ``search``/``flush`` reads ONE consistent snapshot (taken once
-at entry), so it returns results against either the pre- or the
-post-append corpus, never a torn mix.  ``refresh`` is the reader side:
-re-read the manifest (written atomically, so never torn) and reload only
-the shards whose (name, doc count) changed -- how a serving process
-picks up appends made by a crawler process
+shard via ``repro.index.builder.append_index`` under the directory's
+lock file (``sharded_lock``), rewrites the manifest atomically with a
+bumped ``generation``, and swaps the router's state in one assignment --
+a concurrently running ``search``/``flush`` reads ONE consistent
+snapshot (taken once at entry), so it returns results against either the
+pre- or the post-append corpus, never a torn mix.  With a
+``max_shard_docs`` budget, an append that would push the last shard past
+the budget *spills* into NEW tail shards instead (published atomically:
+temp write + ``os.replace``, manifest last, so a crash mid-spill leaves
+readers on the old generation with no torn shard visible).  ``refresh``
+is the reader side: re-read the manifest (written atomically, so never
+torn) and reload only the shards whose (name, doc count) changed --
+spilled shards pick up their round-robin device placement here, and
+unchanged shards keep their device-resident corpus
 (``repro.launch.server.SearchServer`` calls it before every flush).
 """
 
@@ -39,29 +55,38 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
-from typing import Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.data.sigshard import read_sig_meta
 from repro.index.banding import band_keys_packed
 from repro.index.builder import (MANIFEST_NAME, SigIndex, append_index,
-                                 load_index, read_manifest, sharded_lock,
-                                 write_manifest)
+                                 build_index, load_index, read_manifest,
+                                 sharded_lock, write_manifest)
 from repro.index.query import (IndexSearcher, SearchResult, _BatchedAdmission,
-                               _query_words)
+                               _query_words, exact_scan_ids)
 from repro.kernels import PackedSignatures
+from repro.sharding.rules import data_axis_devices, place_shards
 
 
 def merge_topk(results: Sequence[SearchResult], offsets: Sequence[int],
                topk: int) -> SearchResult:
     """Fold per-shard top-k (local ids) into global top-k.
 
-    Shard results arrive sorted by descending score with ascending local
-    ids inside every tie run; concatenating them in shard order makes
-    position order == ascending global id inside every tie run, so a
-    *stable* sort by descending score reproduces ``lax.top_k``'s
-    lowest-id tie-breaking over the concatenated corpus bit-exactly.
+    Scores are computed by the same kernel path on every shard, so
+    sorting the concatenated candidates lexicographically by
+    (descending score, ascending global id) reproduces ``lax.top_k``
+    over the unpartitioned corpus bit-exactly -- ids AND scores.  The
+    rule is a pure function of (score, global id), which makes the merge
+    independent of shard order and contiguity: the sequential fan-out
+    (ascending contiguous ranges) and the mesh fan-out's gathered
+    per-device partials (round-robin interleaved ranges) share this one
+    code path.  Padding entries (id -1) carry -inf scores and sort last.
     """
     if not results:
         raise ValueError("merge_topk needs at least one shard result")
@@ -69,7 +94,7 @@ def merge_topk(results: Sequence[SearchResult], offsets: Sequence[int],
     cat_i = np.concatenate(
         [np.where(r.indices >= 0, r.indices + off, np.int64(-1))
          for r, off in zip(results, offsets)], axis=1)
-    order = np.argsort(-cat_s, axis=1, kind="stable")[:, :topk]
+    order = np.lexsort((cat_i, -cat_s), axis=1)[:, :topk]
     out_s = np.take_along_axis(cat_s, order, axis=1)
     out_i = np.take_along_axis(cat_i, order, axis=1)
     pad = topk - out_s.shape[1]
@@ -83,6 +108,51 @@ def merge_topk(results: Sequence[SearchResult], offsets: Sequence[int],
     return SearchResult(out_i, out_s.astype(np.float32), n_cand)
 
 
+# ---------------------------------------------------------------------------
+# The RPC seam
+# ---------------------------------------------------------------------------
+
+class ShardClient:
+    """Transport seam between the router and one shard's searcher.
+
+    ``ShardedIndex``'s fan-out speaks only this protocol: ``dispatch``
+    starts the shard's work NOW and returns a zero-arg harvest callable
+    producing the shard's ``SearchResult`` (scores + LOCAL doc ids) --
+    local ids plus kernel scores are the entire wire contract, so the
+    router's merge is transport-agnostic.  ``LocalShardClient`` is the
+    in-process implementation; a multi-host deployment swaps in a client
+    whose ``dispatch`` ships the packed query batch over RPC and whose
+    harvest blocks on the remote reply, with no change to the router.
+    """
+
+    @property
+    def n(self) -> int:
+        """Documents served by this shard."""
+        raise NotImplementedError
+
+    def dispatch(self, qwords, topk: int, *, mode: str = "exact",
+                 query_sizes=None,
+                 qkeys=None) -> Callable[[], SearchResult]:
+        raise NotImplementedError
+
+
+class LocalShardClient(ShardClient):
+    """In-process ``ShardClient``: a direct ``IndexSearcher.dispatch``."""
+
+    def __init__(self, searcher: IndexSearcher):
+        self.searcher = searcher
+
+    @property
+    def n(self) -> int:
+        return self.searcher.index.n
+
+    def dispatch(self, qwords, topk: int, *, mode: str = "exact",
+                 query_sizes=None,
+                 qkeys=None) -> Callable[[], SearchResult]:
+        return self.searcher.dispatch(qwords, topk, mode=mode,
+                                      query_sizes=query_sizes, _qkeys=qkeys)
+
+
 @dataclasses.dataclass(frozen=True)
 class _RouterState:
     """One immutable, internally consistent view of the shard set.
@@ -90,25 +160,49 @@ class _RouterState:
     Mutations (``append``, ``refresh``) build a whole new state and swap
     it in with a single attribute assignment; every ``search`` snapshots
     ``self._state`` exactly once, so a racing mutation can never hand a
-    query old offsets with new searchers (a torn view).
+    query old offsets with new searchers (a torn view).  ``cache`` holds
+    per-state derived device data (the mesh dispatcher's stacked
+    corpus); it dies with the state, so a swapped-in corpus can never be
+    served against stale offsets.
     """
 
     searchers: Tuple[IndexSearcher, ...]
+    clients: Tuple[ShardClient, ...]
     offsets: np.ndarray            # global doc-id offset per shard
     paths: Optional[Tuple[str, ...]]
     generation: int
+    cache: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n(self) -> int:
         return int(sum(s.index.n for s in self.searchers))
 
 
-def _make_state(searchers: Sequence[IndexSearcher],
-                paths: Optional[Sequence[str]],
-                generation: int) -> _RouterState:
-    offsets = np.cumsum([0] + [s.index.n for s in searchers])[:-1]
-    return _RouterState(tuple(searchers), offsets,
-                        tuple(paths) if paths else None, generation)
+def _plan_spill(last_n: int, counts: Sequence[int],
+                budget: int) -> List[Tuple[bool, List[int]]]:
+    """Greedy ``.sig``-file assignment for a budgeted append.
+
+    Returns ``[(extend_last, [file indices]), ...]``: files keep landing
+    in the current target shard while its doc count is below ``budget``
+    (so a shard can overshoot by at most one file -- splits stay at
+    ``.sig``-file granularity, like ``build_sharded``), then spill into
+    a NEW shard.  The first group extends the last existing shard only
+    if it still had headroom.
+    """
+    groups: List[Tuple[bool, List[int]]] = []
+    cur: List[int] = []
+    cur_n = last_n
+    extend = True
+    for i, c in enumerate(counts):
+        if cur_n >= budget:
+            if cur:
+                groups.append((extend, cur))
+            cur, cur_n, extend = [], 0, False
+        cur.append(i)
+        cur_n += c
+    if cur:
+        groups.append((extend, cur))
+    return groups
 
 
 class ShardedIndex(_BatchedAdmission):
@@ -119,15 +213,35 @@ class ShardedIndex(_BatchedAdmission):
     doc ids.  ``searcher_kwargs`` flow to every per-shard
     ``IndexSearcher`` (backend, corpus_block, max_device_bytes, ... --
     an out-of-core device window applies per shard).
+
+    ``mesh`` places shards round-robin on the devices of the mesh's
+    ``"data"`` axis and enables the ``shard_map`` exact dispatcher;
+    ``dispatch`` picks the fan-out ("auto" = mesh iff a mesh was given,
+    overridable per ``search`` call).  ``max_shard_docs`` is the spill
+    budget for ``append``; ``client_factory`` wraps each searcher in a
+    ``ShardClient`` (default: in-process).
     """
 
     def __init__(self, indexes: Sequence[SigIndex], *,
                  paths: Optional[Sequence[str]] = None,
                  manifest_dir: Optional[str] = None,
                  generation: int = 0,
+                 mesh: Optional[Mesh] = None,
+                 dispatch: str = "auto",
+                 max_shard_docs: Optional[int] = None,
+                 client_factory: Optional[Callable[[IndexSearcher],
+                                                   ShardClient]] = None,
                  **searcher_kwargs):
         if not indexes:
             raise ValueError("ShardedIndex needs at least one shard")
+        if dispatch not in ("auto", "sequential", "mesh"):
+            raise ValueError(f"dispatch must be 'auto', 'sequential' or "
+                             f"'mesh', got {dispatch!r}")
+        if dispatch == "mesh" and mesh is None:
+            raise ValueError("dispatch='mesh' needs a mesh")
+        if max_shard_docs is not None and max_shard_docs < 1:
+            raise ValueError(f"max_shard_docs must be >= 1, got "
+                             f"{max_shard_docs}")
         spec0 = indexes[0].spec
         for i, idx in enumerate(indexes[1:], 1):
             if idx.spec != spec0 or idx.banding != indexes[0].banding:
@@ -136,19 +250,61 @@ class ShardedIndex(_BatchedAdmission):
                     f"shard 0 {spec0}/{indexes[0].banding}")
         self._searcher_kwargs = dict(searcher_kwargs)
         self.manifest_dir = manifest_dir
+        self.mesh = mesh
+        self.max_shard_docs = max_shard_docs
+        self._dispatch_default = dispatch
+        self._client_factory = client_factory or LocalShardClient
+        # the mesh's data-parallel rank set, as its own 1-axis mesh: the
+        # shard_map dispatch and the placement rule both address devices
+        # along "data" only, whatever other axes the caller's mesh has
+        self._data_mesh = None
+        if mesh is not None:
+            self._data_mesh = Mesh(np.array(data_axis_devices(mesh)),
+                                   ("data",))
+        self._mesh_fns: dict = {}
+        self._mesh_build_lock = threading.Lock()
         # Serializes state swaps so a refresh that read an older manifest
         # can never overwrite a concurrent append's newer state
         # (generations only move forward).
         self._swap_lock = threading.Lock()
-        self._state = _make_state(
-            [IndexSearcher(idx, **searcher_kwargs) for idx in indexes],
-            paths, generation)
+        devices = self._shard_devices(len(indexes))
+        self._state = self._build_state(
+            [self._make_searcher(idx, i, devices)
+             for i, idx in enumerate(indexes)], paths, generation)
         self._admission_init()
+
+    # -- placement + state construction ----------------------------------
+    def _shard_devices(self, n_shards: int):
+        """Round-robin shard -> device placement (None without a mesh).
+
+        Stable by shard position (``repro.sharding.rules.place_shards``):
+        tail growth never relocates an existing shard."""
+        if self._data_mesh is None:
+            return None
+        return place_shards(n_shards, self._data_mesh)
+
+    def _make_searcher(self, idx: SigIndex, shard_i: int,
+                       devices) -> IndexSearcher:
+        dev = devices[shard_i] if devices is not None else None
+        return IndexSearcher(idx, device=dev, **self._searcher_kwargs)
+
+    def _build_state(self, searchers: Sequence[IndexSearcher],
+                     paths: Optional[Sequence[str]],
+                     generation: int) -> _RouterState:
+        offsets = np.cumsum([0] + [s.index.n for s in searchers])[:-1]
+        return _RouterState(tuple(searchers),
+                            tuple(self._client_factory(s) for s in searchers),
+                            offsets, tuple(paths) if paths else None,
+                            generation)
 
     # -- snapshot accessors (each reads self._state exactly once) --------
     @property
     def searchers(self) -> Tuple[IndexSearcher, ...]:
         return self._state.searchers
+
+    @property
+    def clients(self) -> Tuple[ShardClient, ...]:
+        return self._state.clients
 
     @property
     def offsets(self) -> np.ndarray:
@@ -175,43 +331,202 @@ class ShardedIndex(_BatchedAdmission):
     def spec(self):
         return self._state.searchers[0].index.spec
 
+    # -- fan-out ---------------------------------------------------------
+    def _use_mesh(self, dispatch: Optional[str]) -> bool:
+        d = dispatch or self._dispatch_default
+        if d not in ("auto", "sequential", "mesh"):
+            raise ValueError(f"dispatch must be 'auto', 'sequential' or "
+                             f"'mesh', got {d!r}")
+        if d == "mesh" and self._data_mesh is None:
+            raise ValueError("dispatch='mesh' needs a mesh (pass mesh= to "
+                             "ShardedIndex / load_sharded)")
+        return d == "mesh" or (d == "auto" and self._data_mesh is not None)
+
     def search(self, queries: Union[PackedSignatures, jax.Array, np.ndarray],
                topk: int = 10, *, mode: str = "exact",
-               query_sizes: Optional[np.ndarray] = None) -> SearchResult:
-        """Global top-k: fan out to every shard searcher, merge.
+               query_sizes: Optional[np.ndarray] = None,
+               dispatch: Optional[str] = None) -> SearchResult:
+        """Global top-k: fan out to every shard, merge.
 
-        Every shard's device work dispatches (``IndexSearcher.dispatch``)
-        before any shard's result is harvested to host arrays, so shard
-        i+1's candidate generation / scan launch overlaps shard i's
-        device work; band keys for the LSH path are computed once for
-        the batch and shared across shards.  The shard set is snapshotted
+        With the mesh dispatcher, ``mode="exact"`` runs as ONE
+        ``shard_map`` computation: every data-axis device scans its
+        placed shards with an in-jit running top-k, the per-device
+        ``(best_s, best_i)`` partials are gathered across the mesh, and
+        ``merge_topk`` folds them -- bit-identical to the sequential
+        fan-out and to a single-index search.  The LSH path fans out
+        per shard under both dispatchers (candidate generation is a
+        host-side bucket probe per shard); with a mesh the reranks run
+        on each shard's placed device.  The shard set is snapshotted
         ONCE here, so a concurrent ``append``/``refresh`` never tears
         this call's view.
         """
         state = self._state
         qwords = _query_words(queries, state.searchers[0].index.spec)
+        if mode == "exact" and self._use_mesh(dispatch):
+            return self._mesh_exact(state, qwords, topk, query_sizes)
         qkeys = None
         if mode == "lsh":
             idx0 = state.searchers[0].index
             qkeys = np.asarray(band_keys_packed(qwords, idx0.spec,
                                                 idx0.banding))
-        pending = [s.dispatch(qwords, topk, mode=mode,
-                              query_sizes=query_sizes, _qkeys=qkeys)
-                   for s in state.searchers]
+        pending = [c.dispatch(qwords, topk, mode=mode,
+                              query_sizes=query_sizes, qkeys=qkeys)
+                   for c in state.clients]
         return merge_topk([p() for p in pending], state.offsets, topk)
+
+    # -- the shard_map exact dispatcher ----------------------------------
+    def _mesh_layout(self, state: _RouterState) -> dict:
+        """The stacked, mesh-sharded device corpus for one router state
+        (built once per state, under a lock; dies with the state).
+
+        Devices get their round-robin shards concatenated (ascending
+        shard order, so rows stay in ascending global-id order per
+        device -- the in-jit ``lax.top_k`` tie rule then resolves to the
+        lowest global id within each device), each shard padded to a
+        scan-block multiple and each device padded to the widest
+        device's row count; padding rows carry id -1 and score -inf.
+        """
+        cached = state.cache.get("mesh_exact")
+        if cached is not None:
+            return cached
+        with self._mesh_build_lock:
+            cached = state.cache.get("mesh_exact")
+            if cached is not None:
+                return cached
+            s0 = state.searchers[0]
+            meta0 = s0.index.meta
+            devs = data_axis_devices(self._data_mesh)
+            D = len(devs)
+            block = max(s.corpus_block for s in state.searchers)
+            heights = [((s.index.n + block - 1) // block) * block
+                       for s in state.searchers]
+            per_dev = [[s for s in range(len(state.searchers))
+                        if s % D == d] for d in range(D)]
+            rows = max((sum(heights[s] for s in group) or block)
+                       for group in per_dev)
+            words = meta0.words
+            has_sizes = (s0.index.set_sizes is not None and meta0.s > 0)
+            corpus = np.zeros((D * rows, words), np.uint32)
+            ids = np.full(D * rows, -1, np.int32)
+            doc_sizes = np.zeros(D * rows, np.uint32) if has_sizes else None
+            for d, group in enumerate(per_dev):
+                pos = d * rows
+                for s in group:
+                    idx = state.searchers[s].index
+                    n_s = idx.n
+                    corpus[pos:pos + n_s] = idx.words_host
+                    ids[pos:pos + n_s] = (int(state.offsets[s])
+                                          + np.arange(n_s, dtype=np.int32))
+                    if has_sizes:
+                        doc_sizes[pos:pos + n_s] = np.asarray(idx.set_sizes)
+                    pos += heights[s]
+            row_sh = NamedSharding(self._data_mesh, P("data"))
+            layout = {
+                "corpus": jax.device_put(
+                    corpus, NamedSharding(self._data_mesh, P("data", None))),
+                "ids": jax.device_put(ids, row_sh),
+                "doc_sizes": (jax.device_put(doc_sizes, row_sh)
+                              if has_sizes else None),
+                "block": block, "D": D,
+                "D_univ": (1 << meta0.s) if has_sizes else 0,
+                "statics": dict(k=meta0.k, b=meta0.b,
+                                code_bits=meta0.code_bits,
+                                sentinel=meta0.sentinel, backend=s0._be,
+                                blk_q=s0._kb["blk_q"], blk_n=s0._kb["blk_n"],
+                                blk_k=s0._kb["blk_k"]),
+            }
+            state.cache["mesh_exact"] = layout
+            return layout
+
+    def _mesh_scan_fn(self, *, block: int, kk: int, has_sizes: bool,
+                      D_univ: int, statics: dict):
+        """One jitted shard_map per (block, topk, statics) -- cached so
+        repeated flushes reuse the compiled executable."""
+        key = (block, kk, has_sizes, D_univ,
+               tuple(sorted(statics.items())))
+        fn = self._mesh_fns.get(key)
+        if fn is not None:
+            return fn
+        mesh = self._data_mesh
+
+        if has_sizes:
+            def body(qwords, corpus, ids, q_sizes, doc_sizes):
+                bs, bi = exact_scan_ids(qwords, corpus, ids, q_sizes,
+                                        doc_sizes, block=block, topk=kk,
+                                        D=D_univ, **statics)
+                return bs[None], bi[None]
+            in_specs = (P(None, None), P("data", None), P("data"),
+                        P(None), P("data"))
+        else:
+            def body(qwords, corpus, ids):
+                bs, bi = exact_scan_ids(qwords, corpus, ids, None, None,
+                                        block=block, topk=kk, D=0,
+                                        **statics)
+                return bs[None], bi[None]
+            in_specs = (P(None, None), P("data", None), P("data"))
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=(P("data"), P("data")),
+                               check_rep=False))
+        self._mesh_fns[key] = fn
+        return fn
+
+    def _mesh_exact(self, state: _RouterState, qwords, topk: int,
+                    query_sizes) -> SearchResult:
+        if topk < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
+        streamed = [s for s in state.searchers if s.streamed]
+        if streamed:
+            raise ValueError(
+                "mesh dispatch holds the stacked corpus device-resident "
+                "and cannot honor max_device_bytes "
+                f"({len(streamed)} shard(s) would stream); use "
+                "dispatch='sequential' for out-of-core shards")
+        layout = self._mesh_layout(state)
+        has_sizes = layout["doc_sizes"] is not None
+        if has_sizes and query_sizes is None:
+            raise ValueError("index stores set sizes; pass query_sizes "
+                             "to search() for the exact Theorem-1 rerank")
+        kk = min(topk, state.n)
+        fn = self._mesh_scan_fn(block=layout["block"], kk=kk,
+                                has_sizes=has_sizes,
+                                D_univ=layout["D_univ"],
+                                statics=layout["statics"])
+        if has_sizes:
+            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
+                              jnp.asarray(query_sizes), layout["doc_sizes"])
+        else:
+            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"])
+        # the jit output IS the cross-device gather: (D, Q, kk) partials
+        out_s, out_i = np.asarray(out_s), np.asarray(out_i)
+        per_dev = [SearchResult(out_i[d].astype(np.int64), out_s[d])
+                   for d in range(layout["D"])]
+        return merge_topk(per_dev, [0] * layout["D"], topk)
 
     # -- live growth -----------------------------------------------------
     def append(self, sig_paths: Sequence[str], *,
-               set_sizes: Optional[np.ndarray] = None):
-        """Append new documents to the LAST shard (``append_index``),
-        concurrently safe with readers.
+               set_sizes: Optional[np.ndarray] = None
+               ) -> List[Tuple[str, object]]:
+        """Append new documents, concurrently safe with readers.
 
-        Holds the directory lock (so two appenders serialize), refreshes
+        Without a ``max_shard_docs`` budget the LAST shard grows
+        (``append_index``; earlier shards would shift global ids).  With
+        a budget, ``.sig`` files keep extending the last shard while it
+        has headroom, then *spill* into NEW tail shards at file
+        granularity -- spilled shards are published atomically (temp
+        write + ``os.replace``) and become visible only through the
+        manifest rewrite at the end, so a crash mid-spill leaves readers
+        on the old generation with no torn shard visible.
+
+        Holds the directory lock (two appenders serialize), refreshes
         first (picking up appends other processes landed), rewrites the
         manifest atomically with a bumped generation, and swaps this
-        router's state in one assignment.  Existing global ids are
-        unchanged; a racing ``search`` sees the pre- or post-append
-        corpus, never a mix.  Requires shard paths (construct via
+        router's state in one assignment; spilled shards pick up their
+        round-robin device placement in that swap (other processes: on
+        their next ``refresh``).  Existing global ids are unchanged; a
+        racing ``search`` sees the pre- or post-append corpus, never a
+        mix.  Returns ``[(shard_path, IndexMeta), ...]`` for every
+        touched shard.  Requires shard paths (construct via
         ``load_sharded``).
         """
         if not self.paths:
@@ -223,28 +538,69 @@ class ShardedIndex(_BatchedAdmission):
         with sharded_lock(self.manifest_dir):
             self.refresh()
             state = self._state
-            last = state.paths[-1]
-            meta = append_index(last, sig_paths, set_sizes=set_sizes)
-            grown = IndexSearcher(load_index(last), **self._searcher_kwargs)
-            searchers = state.searchers[:-1] + (grown,)
-            write_manifest(self.manifest_dir, state.paths,
+            meta0 = state.searchers[0].index.meta
+            if set_sizes is not None:
+                set_sizes = np.ascontiguousarray(set_sizes, np.uint32)
+            if meta0.has_set_sizes and set_sizes is None:
+                raise ValueError("index stores set sizes; append needs "
+                                 "set_sizes for the new documents")
+            if not meta0.has_set_sizes and set_sizes is not None:
+                raise ValueError("index has no set sizes; cannot add them "
+                                 "on append")
+            counts = [read_sig_meta(p).n for p in sig_paths]
+            if self.max_shard_docs is None:
+                groups = [(True, list(range(len(sig_paths))))]
+            else:
+                groups = _plan_spill(state.searchers[-1].index.n, counts,
+                                     self.max_shard_docs)
+            paths = list(state.paths)
+            searchers = list(state.searchers)
+            devices = self._shard_devices(
+                len(paths) + sum(1 for ext, _ in groups if not ext))
+            touched: List[Tuple[str, object]] = []
+            doc0 = 0
+            for extend, file_idx in groups:
+                files = [sig_paths[i] for i in file_idx]
+                n_g = sum(counts[i] for i in file_idx)
+                sizes_g = (None if set_sizes is None
+                           else set_sizes[doc0:doc0 + n_g])
+                if extend:
+                    last = paths[-1]
+                    meta = append_index(last, files, set_sizes=sizes_g)
+                    searchers[-1] = self._make_searcher(
+                        load_index(last), len(paths) - 1, devices)
+                    touched.append((last, meta))
+                else:
+                    path = os.path.join(self.manifest_dir,
+                                        f"shard_{len(paths):05d}.idx")
+                    meta = build_index(files, path, meta0.banding,
+                                       set_sizes=sizes_g, s=meta0.s,
+                                       atomic=True)
+                    searchers.append(self._make_searcher(
+                        load_index(path), len(paths), devices))
+                    paths.append(path)
+                    touched.append((path, meta))
+                doc0 += n_g
+            write_manifest(self.manifest_dir, paths,
                            [s.index.n for s in searchers],
                            generation=state.generation + 1)
             with self._swap_lock:
-                self._state = _make_state(searchers, state.paths,
-                                          state.generation + 1)
-        return meta
+                self._state = self._build_state(searchers, paths,
+                                                state.generation + 1)
+        return touched
 
     def refresh(self, *, max_attempts: int = 5) -> bool:
         """Re-read the manifest; reload shards another process changed.
 
         Returns True when the served state moved.  Only shards whose
-        (name, doc count) differ from the current snapshot are reloaded;
-        unchanged shards keep their device-resident corpus.  If a writer
-        replaces a shard file between the manifest read and the shard
-        load (the loaded count disagrees with the manifest), the whole
-        read retries -- the swapped-in state is always internally
-        consistent.
+        (name, doc count) differ from the current snapshot are reloaded
+        (a spilled shard is a NEW name, so it loads here and gets its
+        round-robin device placement -- the stable-by-position rule
+        guarantees no existing shard moves); unchanged shards keep their
+        device-resident corpus.  If a writer replaces a shard file
+        between the manifest read and the shard load (the loaded count
+        disagrees with the manifest), the whole read retries -- the
+        swapped-in state is always internally consistent.
         """
         if not self.manifest_dir:
             return False
@@ -258,19 +614,19 @@ class ShardedIndex(_BatchedAdmission):
                       zip(manifest["offsets"],
                           list(manifest["offsets"][1:]) + [manifest["n"]])]
             paths = [os.path.join(self.manifest_dir, nm) for nm in names]
+            devices = self._shard_devices(len(paths))
             old = {}
             if state.paths:
                 old = {(p, s.index.n): s
                        for p, s in zip(state.paths, state.searchers)}
             searchers = []
             consistent = True
-            for path, count in zip(paths, counts):
+            for i, (path, count) in enumerate(zip(paths, counts)):
                 keep = old.get((path, count))
                 if keep is not None:
                     searchers.append(keep)
                     continue
-                loaded = IndexSearcher(load_index(path),
-                                       **self._searcher_kwargs)
+                loaded = self._make_searcher(load_index(path), i, devices)
                 if loaded.index.n != count:
                     consistent = False     # raced a writer; re-read
                     break
@@ -279,8 +635,8 @@ class ShardedIndex(_BatchedAdmission):
                 with self._swap_lock:
                     if manifest["generation"] <= self._state.generation:
                         return False   # a concurrent append moved further
-                    self._state = _make_state(searchers, paths,
-                                              manifest["generation"])
+                    self._state = self._build_state(searchers, paths,
+                                                    manifest["generation"])
                 return True
         raise RuntimeError(
             f"refresh({self.manifest_dir}) kept racing a writer: shard "
@@ -289,18 +645,23 @@ class ShardedIndex(_BatchedAdmission):
 
 
 def load_sharded(shard_dir: str, *, mmap: bool = True,
+                 mesh: Optional[Mesh] = None, dispatch: str = "auto",
+                 max_shard_docs: Optional[int] = None,
                  **searcher_kwargs) -> ShardedIndex:
     """Load a ``build_sharded`` output directory into a ``ShardedIndex``.
 
     ``searcher_kwargs`` flow to every per-shard ``IndexSearcher``
-    (``backend=``, ``corpus_block=``, ``max_device_bytes=``, ...).
+    (``backend=``, ``corpus_block=``, ``max_device_bytes=``, ...);
+    ``mesh``/``dispatch``/``max_shard_docs`` configure the device-
+    parallel fan-out and the append spill budget.
     """
     manifest = read_manifest(shard_dir)
     man_path = os.path.join(shard_dir, MANIFEST_NAME)
     paths = [os.path.join(shard_dir, name) for name in manifest["shards"]]
     indexes = [load_index(p, mmap=mmap) for p in paths]
     sharded = ShardedIndex(indexes, paths=paths, manifest_dir=shard_dir,
-                           generation=manifest["generation"],
+                           generation=manifest["generation"], mesh=mesh,
+                           dispatch=dispatch, max_shard_docs=max_shard_docs,
                            **searcher_kwargs)
     if sharded.n != manifest["n"]:
         raise ValueError(f"{man_path}: manifest n={manifest['n']} != "

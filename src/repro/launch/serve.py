@@ -75,10 +75,18 @@ def serve_index(args) -> None:
             t_build = time.perf_counter() - t0
             n_total = sum(m.n for _, m in built)
             payload = sum(m.payload_bytes for _, m in built)
-            searcher = load_sharded(shard_dir,
+            mesh = None
+            if args.mesh:
+                from repro.launch.mesh import make_debug_mesh
+                n_dev = min(args.mesh, len(jax.devices()))
+                mesh = make_debug_mesh(n_dev, axes=("data",))
+            searcher = load_sharded(shard_dir, mesh=mesh,
                                     max_device_bytes=args.device_window)
             words_of = _sharded_row_reader(searcher)
             what = f"{args.shards} shards"
+            if mesh is not None:
+                what += (f" on {n_dev} device(s) "
+                         f"(shard_map exact dispatch)")
         else:
             meta = build_index(sig_paths, os.path.join(tmp, "corpus.idx"),
                                cfg)
@@ -200,6 +208,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--device-window", type=int, default=None,
                     help="max device-resident packed-corpus bytes; larger "
                          "corpora stream mmap windows (--index)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="place shards round-robin on a D-device "
+                         '("data",) mesh and run the exact scan as one '
+                         "shard_map dispatch (--index --shards; clamped "
+                         "to the available devices; 0 = single-device "
+                         "sequential fan-out)")
     ap.add_argument("--serve", action="store_true",
                     help="drive the continuous-batching SearchServer "
                          "under open-loop Zipf/Poisson traffic (--index)")

@@ -29,11 +29,14 @@ they are also bit-identical to a single-query ``search`` per request
 
 Live index updates ride the ``repro.index`` lock-file + atomic-manifest
 machinery: a crawler process calls ``ShardedIndex.append`` (directory
-lock, atomic ``.idx`` replace, manifest generation bump) while this
-server keeps flushing; with ``refresh=True`` the dispatch thread
-re-reads the versioned manifest before each flush and swaps in grown
-shards between batches, so every flush serves one consistent corpus
-snapshot.
+lock, atomic ``.idx`` replace -- or, past the ``max_shard_docs`` budget,
+a spill into atomically published NEW tail shards -- manifest generation
+bump) while this server keeps flushing; with ``refresh=True`` the
+dispatch thread re-reads the versioned manifest before each flush and
+swaps in grown/spilled shards between batches, so every flush serves
+one consistent corpus snapshot.  A router constructed with a device
+mesh keeps its shard_map exact dispatch across refreshes: spilled
+shards pick up their round-robin device placement in the same swap.
 
 ``ZipfianTraffic`` is the synthetic load model (Zipf-popular query ids,
 Poisson arrivals) behind ``benchmarks/search_serving.py`` and
@@ -225,6 +228,13 @@ class SearchServer:
     @property
     def queue_depth(self) -> int:
         return len(self._queue)
+
+    @property
+    def generation(self) -> Optional[int]:
+        """Manifest generation the served searcher is on (None when the
+        searcher has no notion of one, e.g. a single ``IndexSearcher``)
+        -- lets operators confirm a live append/spill was picked up."""
+        return getattr(self.searcher, "generation", None)
 
     # -- dispatch (the one searcher thread) ------------------------------
     def _next_due(self, now: float) -> float:

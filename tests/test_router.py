@@ -211,12 +211,15 @@ def test_merge_topk_tie_break_and_padding():
     r1 = SearchResult(np.array([[0, 2, -1]]),
                       np.array([[0.7, 0.5, -np.inf]], np.float32))
     out = merge_topk([r0, r1], [0, 10], 3)
-    # 0.7 first, then the tied 0.5s in global-id order: 1 (shard 0)
-    np.testing.assert_array_equal(out.indices, [[10, 1, 0]])
+    # 0.7 first, then the tied 0.5s in ascending GLOBAL-id order (0 then
+    # 1) -- even though shard 0 reported them in the opposite order: the
+    # merge rule is a pure function of (score, global id), never of the
+    # arrival position, so any partition / dispatch order converges
+    np.testing.assert_array_equal(out.indices, [[10, 0, 1]])
     np.testing.assert_array_equal(out.scores,
                                   np.array([[0.7, 0.5, 0.5]], np.float32))
     out = merge_topk([r0], [0], 5)               # fewer docs than topk
-    np.testing.assert_array_equal(out.indices, [[1, 0, -1, -1, -1]])
+    np.testing.assert_array_equal(out.indices, [[0, 1, -1, -1, -1]])
     with pytest.raises(ValueError):
         merge_topk([], [], 3)
 
@@ -258,3 +261,159 @@ def test_merge_topk_tie_run_spans_three_shards():
     # the merge must produce ascending GLOBAL ids across all shards
     np.testing.assert_array_equal(out.indices, [[0, 2, 11, 13, 20, 24]])
     assert np.all(out.scores == tie)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_merge_topk_any_partition_matches_lax_topk(seed):
+    """Property test: partition a scored corpus into 1..8 shards at
+    random cut points, run a real per-shard lax.top_k, merge in a
+    SHUFFLED shard order -- ids and scores must be bit-identical to
+    lax.top_k over the unpartitioned corpus.  Scores are quantized so
+    duplicate values and cross-shard tie runs are everywhere."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 200))
+    topk = int(rng.integers(1, 13))
+    nq = 3
+    scores = (rng.integers(0, 6, (nq, n)) / 4.0).astype(np.float32)
+    kk = min(topk, n)
+    want_s, want_i = jax.lax.top_k(jnp.asarray(scores), kk)
+    n_shards = int(rng.integers(1, 9))
+    cuts = np.sort(rng.choice(np.arange(1, n),
+                              size=min(n_shards - 1, n - 1),
+                              replace=False)) if n_shards > 1 else []
+    bounds = [0, *np.asarray(cuts, int).tolist(), n]
+    results, offsets = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        s_i, i_i = jax.lax.top_k(jnp.asarray(scores[:, lo:hi]),
+                                 min(topk, hi - lo))
+        results.append(SearchResult(np.asarray(i_i).astype(np.int64),
+                                    np.asarray(s_i)))
+        offsets.append(lo)
+    perm = rng.permutation(len(results))         # arrival-order-blind
+    out = merge_topk([results[p] for p in perm],
+                     [offsets[p] for p in perm], topk)
+    np.testing.assert_array_equal(out.indices[:, :kk], np.asarray(want_i))
+    np.testing.assert_array_equal(out.scores[:, :kk], np.asarray(want_s))
+    assert np.all(out.indices[:, kk:] == -1)     # padding past the corpus
+    assert np.all(np.isneginf(out.scores[:, kk:]))
+
+
+def test_router_append_spills_into_new_shards(corpus, tmp_path):
+    """With a max_shard_docs budget, append extends the last shard only
+    while it has headroom, then spills into NEW tail shards; global ids
+    stay put and the grown router matches a single index over all docs.
+    A second process (fresh load_sharded) picks the spill up via the
+    manifest."""
+    tmp, sig_paths, cfg, idx_path = corpus
+    shard_dir = str(tmp_path / "spilling")
+    build_sharded(sig_paths[:3], shard_dir, cfg, n_shards=2)
+    router = load_sharded(shard_dir, backend="interpret", corpus_block=128,
+                          max_shard_docs=1)      # every file spills
+    n_before, shards_before = router.n, router.n_shards
+    n_files = len(sig_paths) - 3
+    touched = router.append(sig_paths[3:])
+    # budget below every file size: each appended file becomes its own
+    # NEW shard, the original shards never grow
+    assert router.n_shards == shards_before + n_files
+    assert all(os.path.basename(p).startswith("shard_")
+               for p, _ in touched)
+    assert [p for p, _ in touched] == list(router.paths[-n_files:])
+    full = IndexSearcher(load_index(idx_path), backend="interpret",
+                         corpus_block=128)
+    assert router.n == full.index.n
+    q = jnp.asarray(np.ascontiguousarray(
+        full.index.words_host[[1, n_before - 1, n_before, router.n - 1]]))
+    want = full.search(q, 10, mode="exact")
+    got = router.search(q, 10, mode="exact")
+    assert np.array_equal(got.indices, want.indices)
+    assert np.array_equal(got.scores, want.scores)
+    # reader-side pickup: an independently loaded router refreshes into
+    # the spilled shard set
+    reader = load_sharded(shard_dir, backend="interpret", corpus_block=128)
+    assert reader.n_shards == router.n_shards
+    got2 = reader.search(q, 10, mode="exact")
+    assert np.array_equal(got2.indices, want.indices)
+    assert np.array_equal(got2.scores, want.scores)
+
+
+def test_router_append_spill_respects_budget_granularity(corpus, tmp_path):
+    """Spill planning is at .sig-file granularity: a shard may overshoot
+    the budget by at most one file, and each spilled shard is refilled
+    up to the budget before the next one starts."""
+    tmp, sig_paths, cfg, idx_path = corpus
+    from repro.data.sigshard import read_sig_meta
+    counts = [read_sig_meta(p).n for p in sig_paths]
+    shard_dir = str(tmp_path / "granular")
+    build_sharded(sig_paths[:2], shard_dir, cfg, n_shards=2)
+    # budget below the last shard's size -> the append is a pure spill
+    budget = min(counts) // 2
+    router = load_sharded(shard_dir, backend="interpret", corpus_block=128,
+                          max_shard_docs=budget)
+    router.append(sig_paths[2:])
+    # pure spill: the two original shards never grew
+    from repro.index.builder import read_manifest
+    man = read_manifest(shard_dir)
+    assert man["offsets"][:2] == [0, counts[0]]
+    assert router.n == sum(counts)
+    # every spilled shard holds >= 1 file and started below the budget
+    spilled = [b - a for a, b in zip(man["offsets"][2:],
+                                     man["offsets"][3:] + [man["n"]])]
+    assert spilled and all(s > 0 for s in spilled)
+    assert len(spilled) == len(sig_paths) - 2    # budget < every file size
+
+
+def test_router_append_spill_crash_before_manifest_is_invisible(
+        corpus, tmp_path, monkeypatch):
+    """Fault injection at the spill-append commit point: the new shard
+    is fully written but the process dies BEFORE the manifest rewrite.
+    Readers must stay on the old generation with no torn shard visible,
+    and a clean retry + refresh() must converge."""
+    tmp, sig_paths, cfg, idx_path = corpus
+    import repro.index.router as router_mod
+    shard_dir = str(tmp_path / "crashy")
+    build_sharded(sig_paths[:3], shard_dir, cfg, n_shards=2)
+    writer = load_sharded(shard_dir, backend="interpret", corpus_block=128,
+                          max_shard_docs=1)      # pure spill, no grow
+    reader = load_sharded(shard_dir, backend="interpret", corpus_block=128)
+    gen0, n0, paths0 = reader.generation, reader.n, reader.paths
+    q = jnp.asarray(np.ascontiguousarray(
+        reader.searchers[0].index.words_host[[0, 3]]))
+    want = reader.search(q, 5)
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected crash before manifest publish")
+
+    monkeypatch.setattr(router_mod, "write_manifest", boom)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        writer.append(sig_paths[3:4])
+    monkeypatch.undo()
+
+    # reader side: manifest untouched -> refresh is a no-op, same corpus,
+    # same results; no temp files leak, no lock is left held
+    assert reader.refresh() is False
+    assert reader.generation == gen0 and reader.n == n0
+    assert reader.paths == paths0
+    got = reader.search(q, 5)
+    assert np.array_equal(got.indices, want.indices)
+    assert np.array_equal(got.scores, want.scores)
+    assert not [f for f in os.listdir(shard_dir) if ".tmp" in f]
+    # ... and a fresh load (new process) sees only the old generation
+    fresh = load_sharded(shard_dir, backend="interpret", corpus_block=128)
+    assert fresh.generation == gen0 and fresh.n == n0
+
+    # clean retry: the orphaned shard file from the crash is atomically
+    # overwritten, the manifest lands, readers converge via refresh()
+    writer2 = load_sharded(shard_dir, backend="interpret",
+                           corpus_block=128, max_shard_docs=1)
+    writer2.append(sig_paths[3:4])
+    assert reader.refresh() is True
+    assert reader.generation > gen0
+    assert reader.n_shards == 3 and reader.n > n0
+    full_idx = str(tmp_path / "full.idx")
+    build_index(sig_paths[:4], full_idx, cfg)
+    single = IndexSearcher(load_index(full_idx), backend="interpret",
+                           corpus_block=128)
+    want2 = single.search(q, 5)
+    got2 = reader.search(q, 5)
+    assert np.array_equal(got2.indices, want2.indices)
+    assert np.array_equal(got2.scores, want2.scores)
