@@ -1,21 +1,36 @@
 """Continuous-batching serving benchmark: the ``SearchServer`` under
-open-loop Zipf/Poisson traffic, with and without live index appends.
+open-loop Zipf/Poisson traffic -- multi-worker dispatch, admission
+control, live appends, and a roofline gap per load level.
 
-The PR-6 serving claims, measured end to end on a synthetic sharded
+The serving-lane claims, measured end to end on a synthetic sharded
 corpus:
 
-  * p50/p99 end-to-end latency, queue-wait, and achieved q/s at several
-    offered loads (Poisson arrivals, Zipf-popular query ids) through the
+  * p50/p99 end-to-end latency, queue-wait, achieved q/s, deadline-miss
+    rate, shed rate, and per-worker occupancy at several offered loads
+    (Poisson arrivals, Zipf-popular query ids) through the
     deadline-aware micro-batching dispatch loop,
-  * the same open-loop run while a concurrent appender thread grows the
-    last shard via ``ShardedIndex.append`` (directory lock + atomic
-    generation-bumped manifest) and the server's per-flush ``refresh``
-    picks the growth up live -- every admitted request still resolves,
+  * the same load served by ONE dispatch worker vs a worker pool
+    (``serving/multiworker_speedup``): overlapped flushes must beat the
+    single thread at the same offered load, with results bit-identical
+    either way (when >1 JAX device is present the router is placed on a
+    ``("data",)`` mesh, so worker flushes land on the collective
+    ``shard_map`` dispatch),
+  * one deliberately unserveable load (``serving/overload_shed``)
+    driving the bounded-queue ``shed-oldest`` admission policy: the
+    server must shed instead of deadlocking, and every NON-shed request
+    still meets its deadline,
+  * an open-loop run while a concurrent appender thread grows the last
+    shard via ``ShardedIndex.append`` and the server's per-flush
+    ``refresh`` picks the growth up live,
   * micro-batched results checked bit-identical per query to a direct
-    ``search`` call on the same searcher.
+    ``search`` call on the same searcher (single- AND multi-worker),
+  * predicted vs measured bytes/flush for the exact hamming scan
+    (``repro.roofline.search``): each load row carries the memory-bound
+    prediction and the measured roofline gap, the autotuning lane's
+    steering metric.
 
 ``--json PATH`` writes the rows as a JSON artifact (uploaded by the
-slow-tier CI job next to ``search_scaling.json``).
+slow-tier AND the multidevice CI jobs next to ``search_scaling.json``).
 """
 
 from __future__ import annotations
@@ -36,7 +51,8 @@ from repro.data.pipeline import make_sharded_dataset
 from repro.data.preprocess import preprocess_shards
 from repro.data.synthetic import DatasetSpec
 from repro.index import build_sharded, choose_band_config, load_sharded
-from repro.launch.server import SearchServer, ZipfianTraffic
+from repro.launch.server import RequestShed, SearchServer, ZipfianTraffic
+from repro.roofline.search import exact_scan_cost, roofline_gap
 from repro.train.online import make_family
 
 D_BITS = 16
@@ -50,6 +66,10 @@ MAX_BATCH = 8
 MAX_DELAY_S = 0.002
 RATES_QPS = (200.0, 2000.0)
 N_REQUESTS = 192
+MULTI_WORKERS = 4
+OVERLOAD_QPS = 50_000.0          # >> capacity: forces the shedding path
+OVERLOAD_QUEUE = 32
+OVERLOAD_DEADLINE_S = 2.0
 
 
 def _build_sigs(tmp: str, name: str, n: int, seed: int) -> list:
@@ -83,15 +103,19 @@ def _warmup(router, words_of) -> None:
         router.search(q, TOPK, mode="exact")
 
 
-def _drive(router, words_of, n_docs: int, rate: float, m: int,
-           seed: int) -> dict:
+def _drive(router, words_of, n_docs: int, rate: float, m: int, seed: int,
+           *, workers: int = 1, admission: str = "none",
+           max_queue=None, deadline_s=None) -> dict:
     """One open-loop run: m Zipf queries at Poisson rate; returns the
-    server's stats snapshot + achieved q/s."""
+    server's stats snapshot + achieved q/s (served requests over wall
+    clock -- shed traffic does not count as served)."""
     traffic = ZipfianTraffic(n_docs, alpha=1.1, seed=seed)
     ids = traffic.ids(m)
     arrivals = traffic.arrival_offsets(m, rate)
     server = SearchServer(router, max_batch=MAX_BATCH,
-                          max_delay_s=MAX_DELAY_S, topk=TOPK, mode="exact")
+                          max_delay_s=MAX_DELAY_S, topk=TOPK, mode="exact",
+                          num_workers=workers, admission=admission,
+                          max_queue=max_queue)
     with server:
         t_start = time.monotonic()
         handles = []
@@ -99,13 +123,46 @@ def _drive(router, words_of, n_docs: int, rate: float, m: int,
             lag = at - (time.monotonic() - t_start)
             if lag > 0:
                 time.sleep(lag)
-            handles.append(server.submit(words_of(int(doc))))
+            handles.append(server.submit(words_of(int(doc)),
+                                         deadline_s=deadline_s))
         for h in handles:
-            h.result(timeout=120.0)
+            try:
+                h.result(timeout=120.0)
+            except RequestShed:
+                pass                             # accounted in snap["shed"]
         elapsed = time.monotonic() - t_start
     snap = server.stats.snapshot()
-    snap["achieved_qps"] = m / elapsed
+    snap["achieved_qps"] = snap["requests"] / elapsed
     return snap
+
+
+def _load_fields(snap: dict, n_docs: int, words: int) -> dict:
+    """The shared per-load row payload: latency/throughput, admission
+    outcomes, per-worker occupancy, and the roofline comparison for the
+    measured mean flush."""
+    q = max(1, int(round(snap["mean_batch"])))
+    cost = exact_scan_cost(n_docs, words, q, topk=TOPK)
+    gap = roofline_gap(cost["bytes"], snap["flush_p50_ms"] / 1e3)
+    return {
+        "achieved_qps": round(snap["achieved_qps"], 1),
+        "latency_p50_ms": round(snap["latency_p50_ms"], 3),
+        "latency_p99_ms": round(snap["latency_p99_ms"], 3),
+        "queue_wait_p50_ms": round(snap["queue_wait_p50_ms"], 3),
+        "flush_p50_ms": round(snap["flush_p50_ms"], 3),
+        "mean_batch": round(snap["mean_batch"], 2),
+        "flush_full": snap["flush_full"],
+        "flush_aged": snap["flush_aged"],
+        "requests": snap["requests"],
+        "workers": snap["workers"],
+        "deadline_miss_rate": round(snap["deadline_miss_rate"], 4),
+        "shed_rate": round(snap["shed_rate"], 4),
+        "worker_occupancy": [round(o, 3)
+                             for o in snap["worker_occupancy"]],
+        "predicted_bytes_per_flush": int(cost["bytes"]),
+        "roofline_predicted_flush_us": round(gap["predicted_s"] * 1e6, 3),
+        "roofline_gap": round(gap["gap"], 1),
+        "achieved_gbps": round(gap["achieved_gbps"], 3),
+    }
 
 
 def run() -> list[Row]:
@@ -116,48 +173,90 @@ def run() -> list[Row]:
         extra_sigs = _build_sigs(tmp, "extra", N_DOCS // 4, seed=9)
         shard_dir = os.path.join(tmp, "shards")
         build_sharded(sig_paths, shard_dir, cfg, n_shards=N_SHARDS)
-        router = load_sharded(shard_dir, corpus_block=CORPUS_BLOCK)
+        mesh = None
+        if len(jax.devices()) > 1:
+            # multidevice CI tier: place shards on the mesh so every
+            # worker flush runs the collective shard_map dispatch
+            from repro.launch.mesh import make_debug_mesh
+            mesh = make_debug_mesh(min(N_SHARDS, len(jax.devices())),
+                                   axes=("data",))
+        router = load_sharded(shard_dir, mesh=mesh,
+                              corpus_block=CORPUS_BLOCK)
         words_of = _row_reader(router)
         n0 = router.n
+        words = int(router.searchers[0].index.words_host.shape[1])
         _warmup(router, words_of)
 
-        # -- micro-batched == direct (bit-identity) ----------------------
+        # -- micro-batched == direct (bit-identity), both worker counts --
         rng = np.random.default_rng(3)
         picks = rng.integers(0, n0, 16)
         direct = router.search(
             np.stack([words_of(int(i)) for i in picks]), TOPK, mode="exact")
-        with SearchServer(router, max_batch=MAX_BATCH,
-                          max_delay_s=MAX_DELAY_S, topk=TOPK,
-                          mode="exact") as srv:
-            served = [srv.submit(words_of(int(i))) for i in picks]
-            served = [h.result(timeout=120.0) for h in served]
-        identical = all(
-            np.array_equal(res.indices[0], direct.indices[j])
-            and np.array_equal(res.scores[0], direct.scores[j])
-            for j, res in enumerate(served))
+        identical = {}
+        for nw in (1, MULTI_WORKERS):
+            with SearchServer(router, max_batch=MAX_BATCH,
+                              max_delay_s=MAX_DELAY_S, topk=TOPK,
+                              mode="exact", num_workers=nw) as srv:
+                served = [srv.submit(words_of(int(i))) for i in picks]
+                served = [h.result(timeout=120.0) for h in served]
+            identical[nw] = all(
+                np.array_equal(res.indices[0], direct.indices[j])
+                and np.array_equal(res.scores[0], direct.scores[j])
+                for j, res in enumerate(served))
         rows.append(("serving/bit_identical", 0.0, {
-            "queries": len(picks),
-            "acceptance": "micro-batched results == direct search()",
-            "ok": bool(identical)}))
+            "queries": len(picks), "workers_checked": [1, MULTI_WORKERS],
+            "acceptance": "micro-batched results == direct search(), "
+                          "single- and multi-worker",
+            "ok": bool(identical[1] and identical[MULTI_WORKERS])}))
 
-        # -- latency/throughput vs offered load --------------------------
+        # -- latency/throughput vs offered load, 1 vs N workers ----------
+        qps_by_workers = {}
         for rate in RATES_QPS:
-            snap = _drive(router, words_of, n0, rate, N_REQUESTS, seed=5)
-            rows.append((f"serving/load_{int(rate)}qps",
-                         snap["latency_p50_ms"] * 1e3, {
-                             "offered_qps": rate,
-                             "achieved_qps": round(snap["achieved_qps"], 1),
-                             "latency_p50_ms": round(
-                                 snap["latency_p50_ms"], 3),
-                             "latency_p99_ms": round(
-                                 snap["latency_p99_ms"], 3),
-                             "queue_wait_p50_ms": round(
-                                 snap["queue_wait_p50_ms"], 3),
-                             "flush_p50_ms": round(snap["flush_p50_ms"], 3),
-                             "mean_batch": round(snap["mean_batch"], 2),
-                             "flush_full": snap["flush_full"],
-                             "flush_aged": snap["flush_aged"],
-                             "requests": snap["requests"]}))
+            for nw in (1, MULTI_WORKERS):
+                snap = _drive(router, words_of, n0, rate, N_REQUESTS,
+                              seed=5, workers=nw)
+                qps_by_workers[(rate, nw)] = snap["achieved_qps"]
+                suffix = "" if nw == 1 else f"_w{nw}"
+                rows.append((f"serving/load_{int(rate)}qps{suffix}",
+                             snap["latency_p50_ms"] * 1e3,
+                             {"offered_qps": rate,
+                              **_load_fields(snap, n0, words)}))
+
+        # -- multi-worker speedup at the saturating load -----------------
+        rate = max(RATES_QPS)
+        single = qps_by_workers[(rate, 1)]
+        multi = qps_by_workers[(rate, MULTI_WORKERS)]
+        rows.append(("serving/multiworker_speedup", 0.0, {
+            "offered_qps": rate,
+            "single_worker_qps": round(single, 1),
+            "multi_worker_qps": round(multi, 1),
+            "workers": MULTI_WORKERS,
+            "cpu_cores": os.cpu_count(),     # <2 cores can't overlap
+            "speedup": round(multi / single, 3),
+            "acceptance": "worker pool outserves one dispatch thread at "
+                          "the same offered load, bit-identically",
+            "ok": bool(multi > single and identical[MULTI_WORKERS])}))
+
+        # -- overload: bounded queue + shed-oldest must shed, not stall --
+        snap = _drive(router, words_of, n0, OVERLOAD_QPS, N_REQUESTS,
+                      seed=8, workers=MULTI_WORKERS,
+                      admission="shed-oldest", max_queue=OVERLOAD_QUEUE,
+                      deadline_s=OVERLOAD_DEADLINE_S)
+        rows.append(("serving/overload_shed",
+                     snap["latency_p50_ms"] * 1e3, {
+                         "offered_qps": OVERLOAD_QPS,
+                         "max_queue": OVERLOAD_QUEUE,
+                         "deadline_budget_ms": OVERLOAD_DEADLINE_S * 1e3,
+                         **_load_fields(snap, n0, words),
+                         "shed": snap["shed"],
+                         "deadline_misses": snap["deadline_misses"],
+                         "acceptance": "overload sheds per policy; every "
+                                       "non-shed request meets its "
+                                       "deadline; nothing deadlocks",
+                         "ok": bool(snap["shed"] > 0
+                                    and snap["requests"] + snap["shed"]
+                                    == N_REQUESTS
+                                    and snap["deadline_misses"] == 0)}))
 
         # -- serving while a concurrent appender grows the index ---------
         stop = threading.Event()

@@ -253,6 +253,44 @@ def exact_scan_ids(qwords, corpus, ids, q_sizes, doc_sizes, *, block, k, b,
     return jax.lax.fori_loop(0, n_blocks, body, (best_s, best_i))
 
 
+def lsh_rerank_ids(qwords, corpus, ids, cand, member, q_sizes, doc_sizes, *,
+                   k, b, code_bits, sentinel, backend, blk_q, blk_n, blk_k,
+                   D, topk):
+    """Candidate gather + kernel rerank over a corpus slice carrying
+    explicit global doc ids -- the per-device body of the mesh LSH
+    fan-out (``repro.index.router``).
+
+    ``cand`` is a (C,) padded vector of LOCAL row indices into this
+    device's stacked corpus block (ascending global-id order -- the
+    ``lax.top_k`` tie rule then resolves to the lowest global id within
+    the device, matching the single-index rerank over the ascending-id
+    candidate union); ``member`` is the (Q, C) per-query membership
+    mask.  Padding slots point at row 0 with ``member`` False, so they
+    score -inf and surface id -1.  Scores go through the same kernel +
+    estimator pipeline as ``IndexSearcher._lsh_dispatch`` -- elementwise
+    identical, so the cross-device ``merge_topk`` fold is bit-identical
+    to the per-shard sequential rerank and to a single unsharded index.
+    Not jitted here: callers trace it inside their own ``shard_map``.
+    """
+    cwords = jnp.take(corpus, cand, axis=0)
+    out = _packed_match_run(qwords, cwords, k=k, code_bits=code_bits,
+                            sentinel=sentinel, backend=backend,
+                            blk_q=blk_q, blk_n=blk_n, blk_k=blk_k)
+    matches, both_empty = out if sentinel else (out, None)
+    if doc_sizes is not None:
+        dsz = jnp.take(doc_sizes, cand)
+        sc = resemblance_scores(matches, both_empty, k, b,
+                                query_sizes=q_sizes, doc_sizes=dsz, D=D)
+    else:
+        sc = resemblance_scores(matches, both_empty, k, b)
+    sc = jnp.where(member, sc, -jnp.inf)
+    top_s, sel = jax.lax.top_k(sc, topk)
+    gids = jnp.take(ids, cand)
+    top_i = jnp.take(gids, sel)
+    top_i = jnp.where(jnp.isneginf(top_s), jnp.int32(-1), top_i)
+    return top_s, top_i
+
+
 class _BatchedAdmission:
     """The submit/flush batched-admission protocol, shared by
     ``IndexSearcher`` and the sharded router

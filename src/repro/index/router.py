@@ -14,14 +14,18 @@ index:
         dispatches before any result is harvested -- jax's async
         dispatch overlaps the shards, on one device or (with a mesh)
         on each shard's placed device.
-      - ``mesh``: the exact scan runs as ONE ``shard_map``-dispatched
-        computation per flush.  Shards are placed round-robin on the
-        devices of the mesh's ``"data"`` axis
-        (``repro.sharding.rules.place_shards``), each device scans its
-        stacked shards with a per-device running top-k carried in-jit,
-        and the per-device ``(best_s, best_i)`` are gathered across the
-        mesh and folded through the same ``merge_topk`` rule -- adding
-        devices divides the scan, instead of adding per-shard latency.
+      - ``mesh``: the exact scan AND the LSH rerank each run as ONE
+        ``shard_map``-dispatched computation per flush.  Shards are
+        placed round-robin on the devices of the mesh's ``"data"`` axis
+        (``repro.sharding.rules.place_shards``); the exact path scans
+        each device's stacked shards with a per-device running top-k
+        carried in-jit, the LSH path gathers each device's padded/
+        masked candidate rows (host bucket probe per shard, band keys
+        computed once per batch) and reranks them in one collective
+        kernel launch; either way the per-device ``(best_s, best_i)``
+        are gathered across the mesh and folded through the same
+        ``merge_topk`` rule -- adding devices divides the scan, instead
+        of adding per-shard latency.
 
   * ``merge_topk``    -- lexicographic (descending score, ascending
     global id) fold of per-shard (scores, local ids): exactly
@@ -69,7 +73,7 @@ from repro.index.builder import (MANIFEST_NAME, SigIndex, append_index,
                                  build_index, load_index, read_manifest,
                                  sharded_lock, write_manifest)
 from repro.index.query import (IndexSearcher, SearchResult, _BatchedAdmission,
-                               _query_words, exact_scan_ids)
+                               _query_words, exact_scan_ids, lsh_rerank_ids)
 from repro.kernels import PackedSignatures
 from repro.sharding.rules import data_axis_devices, place_shards
 
@@ -263,6 +267,11 @@ class ShardedIndex(_BatchedAdmission):
                                    ("data",))
         self._mesh_fns: dict = {}
         self._mesh_build_lock = threading.Lock()
+        # observability: collective dispatches actually taken (tests pin
+        # that the LSH path really went through ONE shard_map, not the
+        # per-shard sequential loop)
+        self.mesh_exact_dispatches = 0
+        self.mesh_lsh_dispatches = 0
         # Serializes state swaps so a refresh that read an older manifest
         # can never overwrite a concurrent append's newer state
         # (generations only move forward).
@@ -348,27 +357,32 @@ class ShardedIndex(_BatchedAdmission):
                dispatch: Optional[str] = None) -> SearchResult:
         """Global top-k: fan out to every shard, merge.
 
-        With the mesh dispatcher, ``mode="exact"`` runs as ONE
-        ``shard_map`` computation: every data-axis device scans its
-        placed shards with an in-jit running top-k, the per-device
-        ``(best_s, best_i)`` partials are gathered across the mesh, and
-        ``merge_topk`` folds them -- bit-identical to the sequential
-        fan-out and to a single-index search.  The LSH path fans out
-        per shard under both dispatchers (candidate generation is a
-        host-side bucket probe per shard); with a mesh the reranks run
-        on each shard's placed device.  The shard set is snapshotted
-        ONCE here, so a concurrent ``append``/``refresh`` never tears
-        this call's view.
+        With the mesh dispatcher, both modes run as ONE ``shard_map``
+        computation per call: ``mode="exact"`` scans each device's
+        placed shards with an in-jit running top-k; ``mode="lsh"``
+        probes every shard's bucket tables on the host (band keys
+        computed once per batch), then gathers + reranks each device's
+        padded candidate rows in one collective kernel dispatch.  In
+        both cases the per-device ``(best_s, best_i)`` partials are
+        gathered across the mesh and ``merge_topk`` folds them --
+        bit-identical (ids AND scores) to the sequential fan-out and to
+        a single-index search.  The shard set is snapshotted ONCE here,
+        so a concurrent ``append``/``refresh`` never tears this call's
+        view.
         """
         state = self._state
         qwords = _query_words(queries, state.searchers[0].index.spec)
-        if mode == "exact" and self._use_mesh(dispatch):
+        use_mesh = self._use_mesh(dispatch)
+        if mode == "exact" and use_mesh:
             return self._mesh_exact(state, qwords, topk, query_sizes)
         qkeys = None
         if mode == "lsh":
             idx0 = state.searchers[0].index
             qkeys = np.asarray(band_keys_packed(qwords, idx0.spec,
                                                 idx0.banding))
+            if use_mesh:
+                return self._mesh_lsh(state, qwords, topk, query_sizes,
+                                      qkeys)
         pending = [c.dispatch(qwords, topk, mode=mode,
                               query_sizes=query_sizes, qkeys=qkeys)
                    for c in state.clients]
@@ -409,11 +423,13 @@ class ShardedIndex(_BatchedAdmission):
             corpus = np.zeros((D * rows, words), np.uint32)
             ids = np.full(D * rows, -1, np.int32)
             doc_sizes = np.zeros(D * rows, np.uint32) if has_sizes else None
+            shard_pos = [None] * len(state.searchers)
             for d, group in enumerate(per_dev):
                 pos = d * rows
                 for s in group:
                     idx = state.searchers[s].index
                     n_s = idx.n
+                    shard_pos[s] = (d, pos - d * rows)
                     corpus[pos:pos + n_s] = idx.words_host
                     ids[pos:pos + n_s] = (int(state.offsets[s])
                                           + np.arange(n_s, dtype=np.int32))
@@ -427,6 +443,10 @@ class ShardedIndex(_BatchedAdmission):
                 "ids": jax.device_put(ids, row_sh),
                 "doc_sizes": (jax.device_put(doc_sizes, row_sh)
                               if has_sizes else None),
+                # shard -> (device, row offset within the device block):
+                # the LSH fan-out maps shard-local candidate ids to this
+                # device-local row space
+                "shard_pos": tuple(shard_pos),
                 "block": block, "D": D,
                 "D_univ": (1 << meta0.s) if has_sizes else 0,
                 "statics": dict(k=meta0.k, b=meta0.b,
@@ -471,10 +491,8 @@ class ShardedIndex(_BatchedAdmission):
         self._mesh_fns[key] = fn
         return fn
 
-    def _mesh_exact(self, state: _RouterState, qwords, topk: int,
-                    query_sizes) -> SearchResult:
-        if topk < 1:
-            raise ValueError(f"topk must be >= 1, got {topk}")
+    @staticmethod
+    def _check_mesh_resident(state: _RouterState) -> None:
         streamed = [s for s in state.searchers if s.streamed]
         if streamed:
             raise ValueError(
@@ -482,6 +500,12 @@ class ShardedIndex(_BatchedAdmission):
                 "and cannot honor max_device_bytes "
                 f"({len(streamed)} shard(s) would stream); use "
                 "dispatch='sequential' for out-of-core shards")
+
+    def _mesh_exact(self, state: _RouterState, qwords, topk: int,
+                    query_sizes) -> SearchResult:
+        if topk < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
+        self._check_mesh_resident(state)
         layout = self._mesh_layout(state)
         has_sizes = layout["doc_sizes"] is not None
         if has_sizes and query_sizes is None:
@@ -498,10 +522,128 @@ class ShardedIndex(_BatchedAdmission):
         else:
             out_s, out_i = fn(qwords, layout["corpus"], layout["ids"])
         # the jit output IS the cross-device gather: (D, Q, kk) partials
+        self.mesh_exact_dispatches += 1
         out_s, out_i = np.asarray(out_s), np.asarray(out_i)
         per_dev = [SearchResult(out_i[d].astype(np.int64), out_s[d])
                    for d in range(layout["D"])]
         return merge_topk(per_dev, [0] * layout["D"], topk)
+
+    # -- the shard_map LSH dispatcher ------------------------------------
+    def _mesh_lsh_fn(self, *, kk: int, has_sizes: bool, D_univ: int,
+                     statics: dict):
+        """One jitted shard_map per (topk, statics) -- candidate widths
+        are shape-polymorphic under the cached callable (jax retraces
+        per padded width; widths are bucketed to powers of two so
+        repeated flushes reuse compiled executables)."""
+        key = ("lsh", kk, has_sizes, D_univ, tuple(sorted(statics.items())))
+        fn = self._mesh_fns.get(key)
+        if fn is not None:
+            return fn
+        mesh = self._data_mesh
+
+        if has_sizes:
+            def body(qwords, corpus, ids, cand, member, q_sizes, doc_sizes):
+                ts, ti = lsh_rerank_ids(qwords, corpus, ids, cand[0],
+                                        member[0], q_sizes, doc_sizes,
+                                        topk=kk, D=D_univ, **statics)
+                return ts[None], ti[None]
+            in_specs = (P(None, None), P("data", None), P("data"),
+                        P("data", None), P("data", None, None),
+                        P(None), P("data"))
+        else:
+            def body(qwords, corpus, ids, cand, member):
+                ts, ti = lsh_rerank_ids(qwords, corpus, ids, cand[0],
+                                        member[0], None, None,
+                                        topk=kk, D=0, **statics)
+                return ts[None], ti[None]
+            in_specs = (P(None, None), P("data", None), P("data"),
+                        P("data", None), P("data", None, None))
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=(P("data"), P("data")),
+                               check_rep=False))
+        self._mesh_fns[key] = fn
+        return fn
+
+    def _mesh_lsh(self, state: _RouterState, qwords, topk: int,
+                  query_sizes, qkeys: np.ndarray) -> SearchResult:
+        """LSH candidate-gen + rerank as ONE collective per flush.
+
+        Candidate generation stays a host-side bucket probe per shard
+        (the sorted key arrays are mmap'd host state), but the gather +
+        kernel rerank + per-device top-k run as a single ``shard_map``
+        dispatch over the SAME stacked mesh corpus the exact path uses:
+        each device gathers its padded/masked candidate rows (shard-
+        local candidate ids mapped through the layout's per-shard row
+        offsets, ascending global-id order per device), reranks them in
+        one kernel launch, and the gathered per-device partials fold
+        through ``merge_topk`` -- bit-identical (ids AND scores) to the
+        sequential per-shard fan-out and to a single unsharded index,
+        including the Theorem-1 rerank.
+        """
+        if topk < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
+        self._check_mesh_resident(state)
+        layout = self._mesh_layout(state)
+        has_sizes = layout["doc_sizes"] is not None
+        if has_sizes and query_sizes is None:
+            raise ValueError("index stores set sizes; pass query_sizes "
+                             "to search() for the exact Theorem-1 rerank")
+        D, q = layout["D"], qwords.shape[0]
+        cand_cols: List[List[np.ndarray]] = [[] for _ in range(D)]
+        mem_cols: List[List[np.ndarray]] = [[] for _ in range(D)]
+        n_cand = np.zeros(q, np.int64)
+        for s, searcher in enumerate(state.searchers):
+            d, pos = layout["shard_pos"][s]
+            per_q = searcher.index.candidates_batch(qkeys)
+            n_cand += np.array([c.size for c in per_q], np.int64)
+            if not any(c.size for c in per_q):
+                continue
+            # shards are disjoint doc ranges, so per-device columns are
+            # the concatenation of the per-shard candidate unions --
+            # ascending global ids (ascending shard order per device,
+            # np.unique-sorted local ids within a shard)
+            union = np.unique(np.concatenate(per_q))
+            member = np.zeros((q, union.size), bool)
+            for i, c in enumerate(per_q):
+                member[i, np.searchsorted(union, c)] = True
+            cand_cols[d].append((pos + union).astype(np.int32))
+            mem_cols[d].append(member)
+        widths = [sum(a.size for a in cols) for cols in cand_cols]
+        if max(widths) == 0:
+            return SearchResult(np.full((q, topk), -1, np.int64),
+                                np.full((q, topk), -np.inf, np.float32),
+                                n_cand)
+        # pad every device to one bucketed width so batch-to-batch
+        # candidate counts reuse compiled kernels (same rule as the
+        # single-searcher LSH rerank); padding slots point at row 0
+        # with membership False -> -inf score, id -1
+        c_pad = max(128, 1 << int(max(widths) - 1).bit_length())
+        cand = np.zeros((D, c_pad), np.int32)
+        member = np.zeros((D, q, c_pad), bool)
+        for d in range(D):
+            if not cand_cols[d]:
+                continue
+            cols = np.concatenate(cand_cols[d])
+            cand[d, :cols.size] = cols
+            member[d, :, :cols.size] = np.concatenate(mem_cols[d], axis=1)
+        kk = min(topk, c_pad)
+        fn = self._mesh_lsh_fn(kk=kk, has_sizes=has_sizes,
+                               D_univ=layout["D_univ"],
+                               statics=layout["statics"])
+        if has_sizes:
+            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
+                              cand, member, jnp.asarray(query_sizes),
+                              layout["doc_sizes"])
+        else:
+            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
+                              cand, member)
+        self.mesh_lsh_dispatches += 1
+        out_s, out_i = np.asarray(out_s), np.asarray(out_i)
+        per_dev = [SearchResult(out_i[d].astype(np.int64), out_s[d])
+                   for d in range(D)]
+        merged = merge_topk(per_dev, [0] * D, topk)
+        return SearchResult(merged.indices, merged.scores, n_cand)
 
     # -- live growth -----------------------------------------------------
     def append(self, sig_paths: Sequence[str], *,

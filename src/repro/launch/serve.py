@@ -6,7 +6,9 @@ similarity-search serving over a packed signature index.
     PYTHONPATH=src python -m repro.launch.serve --index [--mode exact|lsh]
         [--docs N] [--queries N] [--topk K] [--densify d]
         [--shards S] [--device-window BYTES]
-        [--serve --rate QPS --max-delay-ms MS]
+        [--serve --rate QPS --max-delay-ms MS --workers N
+         --admission none|reject|shed-oldest|degrade-to-lsh
+         --max-queue Q --deadline-budget-ms MS]
 
 LMs run the KV-cache serve_step autoregressively for --tokens steps on a
 batch of prompts; recsys archs score --requests synthetic requests through
@@ -22,7 +24,10 @@ streams mmap windows (out-of-core serving).  ``--serve`` puts the
 continuous-batching ``SearchServer`` in front of the searcher and
 replays Zipf-popular queries at a Poisson ``--rate`` offered load,
 reporting the server's queue-wait / flush / end-to-end latency
-percentiles instead of closed-loop batch latency.
+percentiles instead of closed-loop batch latency.  ``--workers`` sizes
+the dispatch pool (default: one per mesh data-axis device), and
+``--admission``/``--max-queue``/``--deadline-budget-ms`` pick the
+overload policy -- reject, shed-oldest, or degrade-to-lsh.
 """
 
 from __future__ import annotations
@@ -131,15 +136,21 @@ def serve_index(args) -> None:
 
 def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
     """Open-loop serving: SearchServer under Zipf/Poisson traffic."""
-    from repro.launch.server import SearchServer, ZipfianTraffic
+    from repro.launch.server import RequestShed, SearchServer, ZipfianTraffic
 
     traffic = ZipfianTraffic(n_total, alpha=args.zipf_alpha, seed=1)
     m = args.requests * args.queries
     ids = traffic.ids(m)
     arrivals = traffic.arrival_offsets(m, args.rate)
+    budget = (args.deadline_budget_ms / 1e3
+              if args.deadline_budget_ms is not None else None)
     server = SearchServer(searcher, max_batch=args.queries,
                           max_delay_s=args.max_delay_ms / 1e3,
-                          topk=args.topk, mode=args.mode)
+                          topk=args.topk, mode=args.mode,
+                          num_workers=args.workers,
+                          admission=args.admission,
+                          max_queue=args.max_queue,
+                          deadline_budget_s=budget)
     with server:
         t_start = time.monotonic()
         handles = []
@@ -147,13 +158,18 @@ def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
             lag = at - (time.monotonic() - t_start)
             if lag > 0:
                 time.sleep(lag)
-            handles.append(server.submit(words_of(int(doc))))
+            handles.append(server.submit(words_of(int(doc)),
+                                         deadline_s=budget))
         for h in handles:
-            h.result(timeout=120.0)
+            try:
+                h.result(timeout=120.0)
+            except RequestShed:
+                pass                    # accounted in stats.shed
         elapsed = time.monotonic() - t_start
     snap = server.stats.snapshot()
     print(f"served {snap['requests']} requests in {snap['batches']} "
-          f"micro-batches (mean {snap['mean_batch']:.1f}/batch, "
+          f"micro-batches over {snap['workers']} worker(s) "
+          f"(mean {snap['mean_batch']:.1f}/batch, "
           f"offered {args.rate:.0f} q/s, achieved "
           f"{snap['requests'] / elapsed:.0f} q/s)")
     print(f"latency p50={snap['latency_p50_ms']:.1f}ms "
@@ -162,6 +178,11 @@ def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
           f"p50={snap['flush_p50_ms']:.1f}ms  triggers: "
           f"full={snap['flush_full']} aged={snap['flush_aged']} "
           f"deadline={snap['flush_deadline']} drain={snap['flush_drain']}")
+    occ = " ".join(f"{o:.2f}" for o in snap["worker_occupancy"])
+    print(f"admission={args.admission}: shed={snap['shed']} "
+          f"(rate {snap['shed_rate']:.3f}) degraded={snap['degraded']} "
+          f"deadline-miss rate {snap['deadline_miss_rate']:.3f}  "
+          f"worker occupancy [{occ}]")
 
 
 def _sharded_row_reader(sharded):
@@ -224,6 +245,22 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-delay-ms", type=float, default=5.0,
                     help="micro-batching window: max time the oldest "
                          "queued request waits before a flush (--serve)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="dispatch workers draining the admission queue "
+                         "(--serve; default: one per data-axis mesh "
+                         "device, else 1)")
+    ap.add_argument("--admission", default="none",
+                    choices=("none", "reject", "shed-oldest",
+                             "degrade-to-lsh"),
+                    help="overload policy when the queue is full or the "
+                         "projected wait blows the deadline budget "
+                         "(--serve)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission-queue depth; beyond it the "
+                         "--admission policy fires (--serve)")
+    ap.add_argument("--deadline-budget-ms", type=float, default=None,
+                    help="per-request latency budget the admission "
+                         "policy defends (--serve)")
     return ap
 
 

@@ -3,40 +3,65 @@
 The paper's endgame is serving b-bit signatures under real traffic
 (PAPER.md §1, §3: retrieval at 200GB scale); this module is the serving
 spine on top of ``repro.index``: a thread-safe admission queue in front
-of any ``submit``/``flush`` searcher (``IndexSearcher`` or the sharded
-``ShardedIndex`` router), flushed by a background dispatch thread with
-deadline-aware micro-batching -- the queue + worker-thread design of
-production inference servers (cf. MLPerf offline-inference harnesses).
+of any ``search``-speaking searcher (``IndexSearcher`` or the sharded
+``ShardedIndex`` router), drained by a POOL of dispatch workers with
+deadline-aware micro-batching -- the queue + worker-pool design of
+production inference servers (cf. MLPerf server-scenario harnesses).
 
-  client threads                     dispatch thread
+  client threads                     dispatch workers (num_workers)
   --------------                     ---------------------------------
-  submit(q) ──> admission queue ──>  wait until: batch full
-  (returns a PendingResult)             OR oldest request aged max_delay
-                                        OR a deadline is about to miss
-                                     pop <= max_batch requests
-                                     [router.refresh(): pick up live
+  submit(q) ──> admission queue ──>  each worker waits until: batch full
+  (returns a PendingResult;             OR oldest request aged max_delay
+   overload: shed / degrade             OR a deadline is about to miss
+   per the admission policy)         pop <= max_batch requests
+                                     [searcher.refresh(): pick up live
                                       appends via the versioned manifest]
-                                     searcher.submit() x batch; flush()
+                                     per-worker handle: submit x batch;
+                                     flush -> ONE batched search
                                      resolve PendingResults + stats
 
-Because a flush drains the queue through the *existing* batched
-admission protocol (one fused scan / one candidate union per flush),
-micro-batched results are **bit-identical** to calling ``search()``
-directly on the same queries -- and since every per-query row of the
-exact scan and the LSH rerank is independent of its co-batched rows,
-they are also bit-identical to a single-query ``search`` per request
+Each worker owns a private batched-admission handle over the SHARED
+searcher, so concurrent flushes overlap: while worker A blocks on its
+device harvest, worker B's flush is already dispatched -- on a device
+mesh (``ShardedIndex(mesh=...)``) the default worker count is one per
+data-axis device, so per-device flushes genuinely run in parallel
+instead of serializing behind one thread.  Because a flush drains the
+queue through the *existing* batched admission protocol (one fused scan
+/ one candidate union per flush), micro-batched results are
+**bit-identical** to calling ``search()`` directly on the same queries
+-- per request and regardless of the worker count or which worker
+flushed which batch, since every per-query row of the exact scan and
+the LSH rerank is independent of its co-batched rows
 (``tests/test_server.py`` pins both).
 
+Admission control (``admission=`` + ``max_queue`` / a deadline budget)
+keeps the server inside its latency budget under overload instead of
+silently blowing it:
+
+  * ``"reject"``      -- an arriving request is shed immediately when
+    the queue is full or its EWMA-projected wait exceeds the budget,
+  * ``"shed-oldest"`` -- the arriving request is admitted and the
+    OLDEST queued requests are shed until the projection fits (the
+    freshest traffic survives -- right for Zipf-popular reads),
+  * ``"degrade-to-lsh"`` -- nothing is shed: over-budget requests are
+    marked and their batches serve ``mode="lsh"`` (candidate probe +
+    rerank over a sliver of the corpus) instead of the exact scan --
+    graceful quality degradation instead of latency collapse.  Batches
+    never mix degraded and exact requests.
+
+A shed request's ``result()`` raises ``RequestShed``; every handle
+surfaces what happened via ``PendingResult.outcome``
+(``"served"`` / ``"shed"`` / ``"degraded"``).  ``ServerStats`` counts
+shed/degraded traffic and per-worker flush counts + busy-time
+occupancy; all mutation happens under one lock, and ``snapshot()``
+copies before computing percentiles, so concurrent submit storms can
+never tear a reading.
+
 Live index updates ride the ``repro.index`` lock-file + atomic-manifest
-machinery: a crawler process calls ``ShardedIndex.append`` (directory
-lock, atomic ``.idx`` replace -- or, past the ``max_shard_docs`` budget,
-a spill into atomically published NEW tail shards -- manifest generation
-bump) while this server keeps flushing; with ``refresh=True`` the
-dispatch thread re-reads the versioned manifest before each flush and
-swaps in grown/spilled shards between batches, so every flush serves
-one consistent corpus snapshot.  A router constructed with a device
-mesh keeps its shard_map exact dispatch across refreshes: spilled
-shards pick up their round-robin device placement in the same swap.
+machinery exactly as before: with ``refresh=True`` one worker per flush
+wave re-reads the versioned manifest (a non-blocking try-lock keeps
+redundant refreshes off the hot path) and swaps in grown/spilled shards
+between batches, so every flush serves one consistent corpus snapshot.
 
 ``ZipfianTraffic`` is the synthetic load model (Zipf-popular query ids,
 Poisson arrivals) behind ``benchmarks/search_serving.py`` and
@@ -53,6 +78,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.index.query import _BatchedAdmission
+
 
 def _percentile(samples, q: float) -> float:
     if not samples:
@@ -60,11 +87,22 @@ def _percentile(samples, q: float) -> float:
     return float(np.percentile(np.asarray(samples, np.float64), q))
 
 
+class RequestShed(RuntimeError):
+    """The admission policy dropped this request under overload."""
+
+
 class PendingResult:
-    """Handle for one admitted request; resolved by the dispatch thread."""
+    """Handle for one admitted request; resolved by a dispatch worker.
+
+    ``outcome`` is ``"pending"`` until resolution, then ``"served"``,
+    ``"shed"`` (the admission policy dropped it -- ``result()`` raises
+    ``RequestShed``) or ``"degraded"`` (served, but through the cheaper
+    LSH path under the ``degrade-to-lsh`` overload policy).
+    """
 
     __slots__ = ("t_submit", "deadline", "query", "query_size",
-                 "_event", "_result", "_error", "queue_wait_s", "latency_s")
+                 "_event", "_result", "_error", "queue_wait_s", "latency_s",
+                 "outcome", "degrade")
 
     def __init__(self, query, query_size, deadline: Optional[float]):
         self.query = query
@@ -73,6 +111,8 @@ class PendingResult:
         self.deadline = deadline          # absolute monotonic time, or None
         self.queue_wait_s: Optional[float] = None
         self.latency_s: Optional[float] = None
+        self.outcome = "pending"
+        self.degrade = False              # admission marked: serve via LSH
         self._event = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None
@@ -82,16 +122,19 @@ class PendingResult:
 
     def result(self, timeout: Optional[float] = None):
         """Block until resolved; returns the per-request ``SearchResult``
-        (one row) or re-raises the batch's failure."""
+        (one row) or re-raises the batch's failure (``RequestShed`` when
+        the admission policy dropped this request)."""
         if not self._event.wait(timeout):
             raise TimeoutError("request not served within timeout")
         if self._error is not None:
             raise self._error
         return self._result
 
-    def _resolve(self, result, error: Optional[BaseException]) -> None:
+    def _resolve(self, result, error: Optional[BaseException],
+                 outcome: str = "served") -> None:
         self._result = result
         self._error = error
+        self.outcome = outcome
         self.latency_s = time.monotonic() - self.t_submit
         self._event.set()
 
@@ -102,69 +145,162 @@ class ServerStats:
 
     ``queue_wait_s`` is admission -> batch pop, ``flush_s`` is one
     batch's dispatch+harvest wall clock, ``latency_s`` is admission ->
-    result resolution (what a client observes).
+    result resolution (what a client observes).  ``worker_flushes`` /
+    ``worker_busy_s`` split the flush histogram per dispatch worker;
+    occupancy (busy / wall time) lands in ``snapshot()``.
+
+    Every mutation happens under ``lock`` (the dispatch workers and the
+    admission path share these fields), and ``snapshot()`` copies the
+    reservoirs under the same lock before computing percentiles -- a
+    concurrent submit storm can never hand ``np.percentile`` a deque
+    that mutates mid-read.
     """
 
     requests: int = 0
     batches: int = 0
     errors: int = 0
     deadline_misses: int = 0
+    shed: int = 0                 # requests dropped by the admission policy
+    degraded: int = 0             # requests served via degrade-to-lsh
     refreshes: int = 0            # manifest refreshes that changed state
     flush_full: int = 0           # trigger: queue reached max_batch
     flush_aged: int = 0           # trigger: oldest request aged max_delay
     flush_deadline: int = 0       # trigger: a deadline was about to miss
     flush_drain: int = 0          # trigger: server stopping
+    workers: int = 1
     window: int = 65536
+    t_start: Optional[float] = None    # set by SearchServer.start()
     queue_wait_s: Deque[float] = dataclasses.field(default=None)  # type: ignore[assignment]
     flush_s: Deque[float] = dataclasses.field(default=None)       # type: ignore[assignment]
     latency_s: Deque[float] = dataclasses.field(default=None)     # type: ignore[assignment]
     batch_sizes: Deque[int] = dataclasses.field(default=None)     # type: ignore[assignment]
+    worker_flushes: List[int] = dataclasses.field(default=None)   # type: ignore[assignment]
+    worker_busy_s: List[float] = dataclasses.field(default=None)  # type: ignore[assignment]
 
     def __post_init__(self):
         for name in ("queue_wait_s", "flush_s", "latency_s", "batch_sizes"):
             if getattr(self, name) is None:
                 setattr(self, name, collections.deque(maxlen=self.window))
+        if self.worker_flushes is None:
+            self.worker_flushes = [0] * self.workers
+        if self.worker_busy_s is None:
+            self.worker_busy_s = [0.0] * self.workers
+        self.lock = threading.Lock()
 
-    def snapshot(self) -> Dict[str, float]:
-        """One consistent dict of counters + p50/p99s (ms)."""
-        out = {"requests": self.requests, "batches": self.batches,
-               "errors": self.errors, "deadline_misses": self.deadline_misses,
-               "refreshes": self.refreshes, "flush_full": self.flush_full,
-               "flush_aged": self.flush_aged,
-               "flush_deadline": self.flush_deadline,
-               "flush_drain": self.flush_drain,
-               "mean_batch": (float(np.mean(self.batch_sizes))
-                              if self.batch_sizes else float("nan"))}
-        for name, samples in (("queue_wait", self.queue_wait_s),
-                              ("flush", self.flush_s),
-                              ("latency", self.latency_s)):
-            out[f"{name}_p50_ms"] = _percentile(samples, 50) * 1e3
-            out[f"{name}_p99_ms"] = _percentile(samples, 99) * 1e3
+    def snapshot(self) -> Dict[str, object]:
+        """One consistent dict of counters + p50/p99s (ms) + per-worker
+        occupancy, copied under the lock (no torn reads)."""
+        with self.lock:
+            out = {"requests": self.requests, "batches": self.batches,
+                   "errors": self.errors,
+                   "deadline_misses": self.deadline_misses,
+                   "shed": self.shed, "degraded": self.degraded,
+                   "refreshes": self.refreshes,
+                   "flush_full": self.flush_full,
+                   "flush_aged": self.flush_aged,
+                   "flush_deadline": self.flush_deadline,
+                   "flush_drain": self.flush_drain,
+                   "workers": self.workers}
+            batch_sizes = list(self.batch_sizes)
+            samples = {"queue_wait": list(self.queue_wait_s),
+                       "flush": list(self.flush_s),
+                       "latency": list(self.latency_s)}
+            flushes = list(self.worker_flushes)
+            busy = list(self.worker_busy_s)
+            t_start = self.t_start
+        out["mean_batch"] = (float(np.mean(batch_sizes)) if batch_sizes
+                             else float("nan"))
+        admitted = out["requests"] + out["shed"]
+        out["shed_rate"] = out["shed"] / max(admitted, 1)
+        out["degraded_rate"] = out["degraded"] / max(out["requests"], 1)
+        out["deadline_miss_rate"] = (out["deadline_misses"]
+                                     / max(out["requests"], 1))
+        for name, vals in samples.items():
+            out[f"{name}_p50_ms"] = _percentile(vals, 50) * 1e3
+            out[f"{name}_p99_ms"] = _percentile(vals, 99) * 1e3
+        out["worker_flushes"] = flushes
+        elapsed = (time.monotonic() - t_start) if t_start else None
+        out["worker_occupancy"] = [
+            (b / elapsed if elapsed and elapsed > 0 else float("nan"))
+            for b in busy]
         return out
+
+
+class _WorkerHandle(_BatchedAdmission):
+    """One dispatch worker's private batched-admission state over the
+    SHARED searcher.
+
+    ``submit`` validates/queues rows against the shared wire spec;
+    ``flush`` runs the worker's batch as ONE ``searcher.search`` call --
+    the underlying searcher snapshots its state per search, so
+    concurrent flushes from different workers are safe and bit-identical
+    to direct calls, while each worker's pending queue stays private
+    (the shared searcher's own submit/flush state is never raced).
+    """
+
+    def __init__(self, searcher):
+        self._searcher = searcher
+        self._admission_init()
+
+    @property
+    def spec(self):
+        return self._searcher.spec
+
+    def search(self, queries, topk: int = 10, *, mode: str = "exact",
+               query_sizes=None):
+        return self._searcher.search(queries, topk, mode=mode,
+                                     query_sizes=query_sizes)
+
+
+ADMISSION_POLICIES = ("none", "reject", "shed-oldest", "degrade-to-lsh")
 
 
 class SearchServer:
     """Deadline-aware micro-batching front end over a searcher.
 
-    ``searcher`` is anything speaking the batched-admission protocol
-    (``IndexSearcher`` or ``ShardedIndex``); all searcher calls happen on
-    the single dispatch thread, so the underlying jax state is never
-    raced.  A flush fires when the queue holds ``max_batch`` requests,
-    when the oldest request has waited ``max_delay_s``, or when a
-    request's deadline minus the estimated flush latency (EWMA of recent
-    flushes) is about to pass.  ``refresh=True`` (default) calls
-    ``searcher.refresh()`` -- when it has one -- before each flush, so a
-    served ``ShardedIndex`` picks up concurrent appends batch by batch.
+    ``searcher`` is anything with a ``search`` batch API and a wire
+    ``spec`` (``IndexSearcher`` or ``ShardedIndex``); ``num_workers``
+    dispatch workers drain the shared admission queue, each through its
+    own private admission handle, so flushes overlap (default: one per
+    device on the searcher's mesh ``"data"`` axis, else 1).  A flush
+    fires when the queue holds ``max_batch`` requests, when the oldest
+    request has waited ``max_delay_s``, or when a request's deadline
+    minus the estimated flush latency (EWMA of recent flushes) is about
+    to pass.  ``refresh=True`` (default) calls ``searcher.refresh()``
+    -- when it has one -- before each flush wave (one worker at a time,
+    via a try-lock), so a served ``ShardedIndex`` picks up concurrent
+    appends batch by batch.
+
+    Overload: ``admission`` picks the policy (see the module docstring),
+    triggered when the queue holds ``max_queue`` requests or when the
+    EWMA-projected queue wait exceeds the request's deadline budget
+    (its ``deadline_s``, else ``deadline_budget_s``).
     """
 
     def __init__(self, searcher, *, max_batch: int = 64,
                  max_delay_s: float = 0.005, topk: int = 10,
                  mode: str = "exact", refresh: bool = True,
-                 deadline_safety: float = 1.5):
+                 deadline_safety: float = 1.5,
+                 num_workers: Optional[int] = None,
+                 admission: str = "none",
+                 max_queue: Optional[int] = None,
+                 deadline_budget_s: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if mode not in ("exact", "lsh"):
             raise ValueError(f"mode must be 'exact' or 'lsh', got {mode!r}")
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission must be one of "
+                             f"{ADMISSION_POLICIES}, got {admission!r}")
+        if admission == "degrade-to-lsh" and mode != "exact":
+            raise ValueError("admission='degrade-to-lsh' needs mode='exact' "
+                             "(there is nothing cheaper to degrade to)")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if num_workers is None:
+            num_workers = self._default_workers(searcher)
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
         self.searcher = searcher
         self.max_batch = max_batch
         self.max_delay_s = max_delay_s
@@ -172,31 +308,59 @@ class SearchServer:
         self.mode = mode
         self.refresh = refresh and hasattr(searcher, "refresh")
         self.deadline_safety = deadline_safety
-        self.stats = ServerStats()
+        self.num_workers = num_workers
+        self.admission = admission
+        self.max_queue = max_queue
+        self.deadline_budget_s = deadline_budget_s
+        self.stats = ServerStats(workers=num_workers)
         self._queue: Deque[PendingResult] = collections.deque()
         self._cond = threading.Condition()
+        self._refresh_lock = threading.Lock()
         self._stopping = False
-        self._thread: Optional[threading.Thread] = None
+        self._threads: List[threading.Thread] = []
+        self._handles: List[_WorkerHandle] = []
         self._est_flush_s = max(max_delay_s, 1e-3)   # EWMA, pre-warm guess
+
+    @staticmethod
+    def _default_workers(searcher) -> int:
+        """One worker per device on the searcher's mesh ``"data"`` axis
+        (overlapping flushes keep every placed device busy), else 1."""
+        mesh = getattr(searcher, "mesh", None)
+        if mesh is None:
+            return 1
+        try:
+            from repro.sharding.rules import data_axis_devices
+            return max(1, len(data_axis_devices(mesh)))
+        except (ImportError, ValueError):
+            return 1
 
     # -- lifecycle -------------------------------------------------------
     def start(self) -> "SearchServer":
-        if self._thread is not None:
+        if self._threads:
             raise RuntimeError("server already started")
-        self._thread = threading.Thread(target=self._dispatch_loop,
-                                        daemon=True, name="search-dispatch")
-        self._thread.start()
+        self._stopping = False
+        self.stats.t_start = time.monotonic()
+        self._handles = [_WorkerHandle(self.searcher)
+                         for _ in range(self.num_workers)]
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop, args=(i,),
+                             daemon=True, name=f"search-dispatch-{i}")
+            for i in range(self.num_workers)]
+        for t in self._threads:
+            t.start()
         return self
 
     def stop(self) -> None:
         """Drain the queue (remaining requests are flushed) and join."""
-        if self._thread is None:
+        if not self._threads:
             return
         with self._cond:
             self._stopping = True
             self._cond.notify_all()
-        self._thread.join()
-        self._thread = None
+        for t in self._threads:
+            t.join()
+        self._threads = []
+        self._handles = []
 
     def __enter__(self) -> "SearchServer":
         return self.start()
@@ -209,10 +373,14 @@ class SearchServer:
                deadline_s: Optional[float] = None) -> PendingResult:
         """Admit one query row; returns immediately with a handle.
 
-        ``deadline_s`` is relative (seconds from now): the dispatcher
-        tries to flush early enough that the result lands before it.
+        ``deadline_s`` is relative (seconds from now): the dispatchers
+        try to flush early enough that the result lands before it, and
+        the admission policy (when one is set) uses it as the overload
+        budget.  Under overload the returned handle may already be
+        resolved as shed (``result()`` raises ``RequestShed``) or marked
+        for LSH degradation -- check ``PendingResult.outcome``.
         """
-        if self._thread is None:
+        if not self._threads:
             raise RuntimeError("server not started (use `with server:` "
                                "or call start())")
         deadline = (time.monotonic() + deadline_s
@@ -221,9 +389,54 @@ class SearchServer:
         with self._cond:
             if self._stopping:
                 raise RuntimeError("server is stopping")
-            self._queue.append(req)
+            budget = (deadline_s if deadline_s is not None
+                      else self.deadline_budget_s)
+            if self.admission == "none":
+                self._queue.append(req)
+            else:
+                self._admit(req, budget)
             self._cond.notify_all()
         return req
+
+    def _projected_wait_s(self, depth: int) -> float:
+        """EWMA-projected queue wait for a request behind ``depth``
+        others: full batches ahead of it, divided over the workers."""
+        batches = (depth + self.max_batch) // self.max_batch
+        return batches * self._est_flush_s / self.num_workers
+
+    def _overloaded(self, depth: int, budget: Optional[float]) -> bool:
+        if self.max_queue is not None and depth >= self.max_queue:
+            return True
+        return (budget is not None
+                and self._projected_wait_s(depth) > budget)
+
+    def _shed(self, req: PendingResult, why: str) -> None:
+        with self.stats.lock:
+            self.stats.shed += 1
+        req._resolve(None, RequestShed(why), outcome="shed")
+
+    def _admit(self, req: PendingResult, budget: Optional[float]) -> None:
+        """Apply the admission policy (caller holds ``_cond``)."""
+        depth = len(self._queue)
+        if not self._overloaded(depth, budget):
+            self._queue.append(req)
+            return
+        if self.admission == "reject":
+            self._shed(req, f"admission rejected: queue depth {depth}, "
+                            f"projected wait "
+                            f"{self._projected_wait_s(depth) * 1e3:.1f}ms "
+                            f"over budget")
+            return
+        if self.admission == "shed-oldest":
+            self._queue.append(req)
+            while len(self._queue) > 1 and self._overloaded(
+                    len(self._queue) - 1, budget):
+                self._shed(self._queue.popleft(),
+                           "admission overload: shed oldest queued request")
+            return
+        # degrade-to-lsh: admit, but the batch serves the cheap path
+        req.degrade = True
+        self._queue.append(req)
 
     @property
     def queue_depth(self) -> int:
@@ -236,7 +449,7 @@ class SearchServer:
         -- lets operators confirm a live append/spill was picked up."""
         return getattr(self.searcher, "generation", None)
 
-    # -- dispatch (the one searcher thread) ------------------------------
+    # -- dispatch (the worker pool) --------------------------------------
     def _next_due(self, now: float) -> float:
         """Earliest time the current queue must flush."""
         oldest = self._queue[0]
@@ -247,75 +460,112 @@ class SearchServer:
                 due = min(due, r.deadline - margin)
         return due
 
-    def _dispatch_loop(self) -> None:
+    def _take_batch(self):
+        """Wait for a flush trigger, pop one batch (caller holds
+        ``_cond``).  Returns ``(None, "")`` when stopping and drained.
+        Batches never mix degraded and non-degraded requests (the
+        degrade-to-lsh policy switches the whole batch's mode)."""
+        while True:
+            if not self._queue:
+                if self._stopping:
+                    return None, ""
+                self._cond.wait()
+                continue
+            if self._stopping:
+                trigger = "drain"
+                break
+            now = time.monotonic()
+            if len(self._queue) >= self.max_batch:
+                trigger = "full"
+                break
+            due = self._next_due(now)
+            if now >= due:
+                oldest_due = self._queue[0].t_submit + self.max_delay_s
+                trigger = "aged" if due >= oldest_due else "deadline"
+                break
+            self._cond.wait(timeout=due - now)
+        flag = self._queue[0].degrade
+        batch: List[PendingResult] = []
+        while (self._queue and len(batch) < self.max_batch
+               and self._queue[0].degrade == flag):
+            batch.append(self._queue.popleft())
+        if self._queue:
+            self._cond.notify_all()       # leftover work for other workers
+        return batch, trigger
+
+    def _dispatch_loop(self, wi: int) -> None:
+        handle = self._handles[wi]
         while True:
             with self._cond:
-                while not self._queue and not self._stopping:
-                    self._cond.wait()
-                if not self._queue and self._stopping:
-                    return
-                trigger = "drain" if self._stopping else None
-                while trigger is None:
-                    now = time.monotonic()
-                    if len(self._queue) >= self.max_batch:
-                        trigger = "full"
-                        break
-                    due = self._next_due(now)
-                    if now >= due:
-                        oldest_due = (self._queue[0].t_submit
-                                      + self.max_delay_s)
-                        trigger = "aged" if due >= oldest_due else "deadline"
-                        break
-                    self._cond.wait(timeout=due - now)
-                    if self._stopping:
-                        trigger = "drain"
-                batch = [self._queue.popleft()
-                         for _ in range(min(self.max_batch,
-                                            len(self._queue)))]
+                batch, trigger = self._take_batch()
+            if batch is None:
+                return
             if batch:
-                self._flush_batch(batch, trigger)
+                self._flush_batch(batch, trigger, wi, handle)
 
-    def _flush_batch(self, batch: List[PendingResult], trigger: str) -> None:
+    def _flush_batch(self, batch: List[PendingResult], trigger: str,
+                     wi: int, handle: _WorkerHandle) -> None:
         t0 = time.monotonic()
         stats = self.stats
-        setattr(stats, f"flush_{trigger}",
-                getattr(stats, f"flush_{trigger}") + 1)
-        if self.refresh:
+        degraded = bool(batch[0].degrade and self.mode == "exact")
+        mode = "lsh" if degraded else self.mode
+        outcome = "degraded" if degraded else "served"
+        with stats.lock:
+            setattr(stats, f"flush_{trigger}",
+                    getattr(stats, f"flush_{trigger}") + 1)
+        if self.refresh and self._refresh_lock.acquire(blocking=False):
+            # one worker refreshes per flush wave; the rest serve the
+            # snapshot they'd have gotten anyway (keep serving on a
+            # failed refresh, too)
             try:
-                if self.searcher.refresh():
-                    stats.refreshes += 1
-            except Exception:           # keep serving on a failed refresh
-                stats.errors += 1
+                try:
+                    if self.searcher.refresh():
+                        with stats.lock:
+                            stats.refreshes += 1
+                except Exception:
+                    with stats.lock:
+                        stats.errors += 1
+            finally:
+                self._refresh_lock.release()
         tickets: Dict[int, PendingResult] = {}
         for r in batch:
             r.queue_wait_s = t0 - r.t_submit
-            stats.queue_wait_s.append(r.queue_wait_s)
+            with stats.lock:
+                stats.queue_wait_s.append(r.queue_wait_s)
             try:
-                tickets[self.searcher.submit(
+                tickets[handle.submit(
                     r.query, query_size=r.query_size)] = r
             except Exception as e:       # a malformed query fails only itself
-                stats.errors += 1
+                with stats.lock:
+                    stats.errors += 1
                 r._resolve(None, e)
         error: Optional[BaseException] = None
         out: Dict[int, object] = {}
         if tickets:
             try:
-                out = self.searcher.flush(self.topk, mode=self.mode)
+                out = handle.flush(self.topk, mode=mode)
             except Exception as e:
                 error = e
-                stats.errors += 1
+                with stats.lock:
+                    stats.errors += 1
         dt = time.monotonic() - t0
-        self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * dt
-        stats.batches += 1
-        stats.flush_s.append(dt)
-        stats.batch_sizes.append(len(batch))
         now = time.monotonic()
+        with stats.lock:
+            self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * dt
+            stats.batches += 1
+            stats.flush_s.append(dt)
+            stats.batch_sizes.append(len(batch))
+            stats.worker_flushes[wi] += 1
+            stats.worker_busy_s[wi] += dt
+            if degraded:
+                stats.degraded += len(tickets)
         for ticket, r in tickets.items():
-            r._resolve(out.get(ticket), error)
-            stats.requests += 1
-            stats.latency_s.append(r.latency_s)
-            if r.deadline is not None and now > r.deadline:
-                stats.deadline_misses += 1
+            r._resolve(out.get(ticket), error, outcome=outcome)
+            with stats.lock:
+                stats.requests += 1
+                stats.latency_s.append(r.latency_s)
+                if r.deadline is not None and now > r.deadline:
+                    stats.deadline_misses += 1
 
 
 # ---------------------------------------------------------------------------
@@ -328,7 +578,9 @@ class ZipfianTraffic:
     Query popularity follows a Zipf law with exponent ``alpha`` over a
     random permutation of the doc ids (so popular docs are scattered,
     not clustered at low ids); arrivals are a Poisson process at
-    ``rate_qps``.  Deterministic per seed.
+    ``rate_qps``.  Deterministic per seed -- and independent of the
+    serving side entirely (worker counts, admission policies), so load
+    replays compare servers on identical traffic.
     """
 
     def __init__(self, n_docs: int, *, alpha: float = 1.1, seed: int = 0):

@@ -79,6 +79,16 @@ def test_mesh_dispatch_bit_identical(corpus, tmp_path, host_devices,
         seq = router.search(q, 10, mode=mode, dispatch="sequential")
         assert np.array_equal(seq.indices, want.indices), mode
         assert np.array_equal(seq.scores, want.scores), mode
+        # LSH candidate accounting survives the collective: the summed
+        # per-shard union sizes equal the single index's unions
+        # (disjoint shards), on both dispatch paths
+        if mode == "lsh":
+            assert np.array_equal(got.n_candidates, want.n_candidates)
+            assert np.array_equal(seq.n_candidates, want.n_candidates)
+    # the collective path (not the sequential loop) served the auto
+    # dispatches above -- one shard_map LSH flush, one exact
+    assert router.mesh_lsh_dispatches == 1
+    assert router.mesh_exact_dispatches == 1
 
 
 def test_mesh_placement_lands_on_distinct_devices(corpus, tmp_path,
@@ -129,13 +139,17 @@ def test_mesh_with_set_sizes_rerank(tmp_path, host_devices):
                           backend="interpret", corpus_block=32)
     q = jnp.asarray(np.asarray(wire.data[:5]))
     qs = sizes[:5]
-    want = single.search(q, 8, query_sizes=qs)
-    got = router.search(q, 8, query_sizes=qs)
-    assert np.array_equal(got.indices, want.indices)
-    assert np.array_equal(got.scores, want.scores)
+    for mode in ("exact", "lsh"):
+        want = single.search(q, 8, mode=mode, query_sizes=qs)
+        got = router.search(q, 8, mode=mode, query_sizes=qs)
+        assert np.array_equal(got.indices, want.indices), mode
+        assert np.array_equal(got.scores, want.scores), mode
+    assert router.mesh_lsh_dispatches == 1
     # forgetting query_sizes fails loudly on the mesh path too
     with pytest.raises(ValueError, match="query_sizes"):
         router.search(q, 8)
+    with pytest.raises(ValueError, match="query_sizes"):
+        router.search(q, 8, mode="lsh")
 
 
 def test_mesh_submit_flush_admission(corpus, tmp_path, host_devices):

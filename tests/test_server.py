@@ -29,7 +29,8 @@ from repro.data.synthetic import DatasetSpec
 from repro.index import (IndexSearcher, build_index, build_sharded,
                          choose_band_config, load_index, load_sharded)
 from repro.launch.serve import build_parser
-from repro.launch.server import SearchServer, ServerStats, ZipfianTraffic
+from repro.launch.server import (RequestShed, SearchServer, ServerStats,
+                                 ZipfianTraffic)
 
 K, S, B = 128, 16, 8
 
@@ -242,6 +243,202 @@ def test_server_stats_reservoir_bounded():
 
 
 # ---------------------------------------------------------------------------
+# Multi-worker dispatch + admission control
+# ---------------------------------------------------------------------------
+
+def test_server_multiworker_bit_identical(searcher):
+    """Four dispatch workers draining one queue: every request's row is
+    still bit-identical to direct search(), no matter which worker's
+    flush served it, and the per-worker histograms account for every
+    batch."""
+    n = searcher.index.n
+    rng = np.random.default_rng(42)
+    picks = rng.integers(0, n, size=24)
+    rows = [np.asarray(searcher.index.words_host[i]) for i in picks]
+    direct = searcher.search(np.stack(rows), 5, mode="exact")
+    with SearchServer(searcher, max_batch=4, max_delay_s=0.005,
+                      topk=5, num_workers=4) as srv:
+        handles = [srv.submit(r) for r in rows]
+        results = [h.result(timeout=60.0) for h in handles]
+    for j, res in enumerate(results):
+        assert np.array_equal(res.indices[0], direct.indices[j])
+        assert np.array_equal(res.scores[0], direct.scores[j])
+    snap = srv.stats.snapshot()
+    assert snap["workers"] == 4
+    assert snap["requests"] == len(rows) and snap["errors"] == 0
+    assert sum(snap["worker_flushes"]) == snap["batches"]
+    assert len(snap["worker_occupancy"]) == 4
+    assert all(h.outcome == "served" for h in handles)
+
+
+class _SlowSearcher:
+    """Wraps a real searcher so every flush costs a fixed wall-clock
+    delay -- a deterministic overload lever for the admission tests."""
+
+    def __init__(self, inner, delay_s):
+        self.inner = inner
+        self.delay_s = delay_s
+
+    @property
+    def spec(self):
+        return self.inner.spec
+
+    def search(self, queries, topk=10, *, mode="exact", query_sizes=None):
+        time.sleep(self.delay_s)
+        return self.inner.search(queries, topk, mode=mode,
+                                 query_sizes=query_sizes)
+
+
+def test_server_overload_sheds_and_never_deadlocks(searcher):
+    """Offered load >> capacity with a bounded queue: shed-oldest drops
+    traffic instead of blowing the budget, every handle resolves (no
+    deadlock), and the requests that WERE served met their deadline."""
+    slow = _SlowSearcher(searcher, 0.05)
+    rows = [np.asarray(searcher.index.words_host[i % searcher.index.n])
+            for i in range(60)]
+    with SearchServer(slow, max_batch=4, max_delay_s=0.002, topk=3,
+                      admission="shed-oldest", max_queue=8) as srv:
+        handles = [srv.submit(r, deadline_s=5.0) for r in rows]
+        for h in handles:
+            if h.outcome != "shed":
+                h.result(timeout=60.0)
+    assert all(h.done() for h in handles)            # nothing stranded
+    stats = srv.stats
+    assert stats.shed > 0                            # overload really shed
+    assert stats.requests + stats.shed == len(rows)  # full accounting
+    assert stats.deadline_misses == 0                # survivors on budget
+    shed_handles = [h for h in handles if h.outcome == "shed"]
+    assert len(shed_handles) == stats.shed
+    with pytest.raises(RequestShed):
+        shed_handles[0].result(timeout=0)
+    snap = stats.snapshot()
+    assert snap["shed_rate"] == pytest.approx(
+        stats.shed / len(rows))
+
+
+def test_server_admission_reject_is_immediate(searcher):
+    """reject resolves the arriving request at submit time -- the
+    caller learns within the submit call, not after a queue wait."""
+    slow = _SlowSearcher(searcher, 0.05)
+    rows = [np.asarray(searcher.index.words_host[i % searcher.index.n])
+            for i in range(30)]
+    with SearchServer(slow, max_batch=4, max_delay_s=0.002, topk=3,
+                      admission="reject", max_queue=4) as srv:
+        handles = [srv.submit(r, deadline_s=5.0) for r in rows]
+        rejected = [h for h in handles if h.done() and h.outcome == "shed"]
+        assert rejected                              # rejected at admission
+        for h in handles:
+            if h.outcome != "shed":
+                h.result(timeout=60.0)
+    assert srv.stats.shed == len([h for h in handles
+                                  if h.outcome == "shed"])
+    assert srv.stats.requests + srv.stats.shed == len(rows)
+    assert srv.stats.deadline_misses == 0
+
+
+def test_server_degrade_to_lsh(searcher):
+    """Under a budget no exact flush can meet, degrade-to-lsh serves
+    every request -- nothing shed -- through the LSH path, bit-identical
+    to a direct mode='lsh' search."""
+    n = searcher.index.n
+    rows = [np.asarray(searcher.index.words_host[i])
+            for i in (0, 3, n // 2, n - 1)]
+    direct = searcher.search(np.stack(rows), 5, mode="lsh")
+    with SearchServer(searcher, max_batch=4, max_delay_s=0.01, topk=5,
+                      admission="degrade-to-lsh",
+                      deadline_budget_s=1e-6) as srv:   # unmeetable budget
+        handles = [srv.submit(r) for r in rows]
+        results = [h.result(timeout=60.0) for h in handles]
+    assert all(h.outcome == "degraded" for h in handles)
+    for j, res in enumerate(results):
+        assert np.array_equal(res.indices[0], direct.indices[j])
+        assert np.array_equal(res.scores[0], direct.scores[j])
+    assert srv.stats.shed == 0
+    assert srv.stats.degraded == len(rows)
+    assert srv.stats.snapshot()["degraded_rate"] == 1.0
+
+
+def test_server_admission_validation(searcher):
+    with pytest.raises(ValueError, match="admission"):
+        SearchServer(searcher, admission="drop-everything")
+    with pytest.raises(ValueError, match="degrade-to-lsh"):
+        SearchServer(searcher, admission="degrade-to-lsh", mode="lsh")
+    with pytest.raises(ValueError, match="max_queue"):
+        SearchServer(searcher, admission="reject", max_queue=0)
+    with pytest.raises(ValueError, match="num_workers"):
+        SearchServer(searcher, num_workers=0)
+
+
+def test_server_stats_concurrent_snapshot(searcher):
+    """Seeded multi-thread submit storm while snapshot() runs hot:
+    every snapshot is computed from a consistent copy (np.percentile
+    over a mutating deque raises RuntimeError -- this pins the lock-
+    copy), and the final counters account for every request."""
+    n = searcher.index.n
+    rng = np.random.default_rng(7)
+    per_thread = 25
+    picks = rng.integers(0, n, size=(4, per_thread))
+    snap_errors, submit_errors = [], []
+    with SearchServer(searcher, max_batch=8, max_delay_s=0.001,
+                      topk=3, num_workers=2) as srv:
+        def storm(t):
+            try:
+                hs = [srv.submit(
+                    np.asarray(searcher.index.words_host[i]))
+                    for i in picks[t]]
+                for h in hs:
+                    h.result(timeout=60.0)
+            except Exception as e:               # pragma: no cover
+                submit_errors.append(e)
+
+        threads = [threading.Thread(target=storm, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        seen = 0
+        while any(t.is_alive() for t in threads):
+            try:
+                snap = srv.stats.snapshot()
+            except RuntimeError as e:            # pragma: no cover
+                snap_errors.append(e)
+                break
+            assert snap["requests"] >= seen      # monotone, never torn
+            seen = snap["requests"]
+        for t in threads:
+            t.join()
+    assert not submit_errors and not snap_errors
+    snap = srv.stats.snapshot()
+    assert snap["requests"] == 4 * per_thread
+    assert snap["errors"] == 0
+    assert sum(snap["worker_flushes"]) == snap["batches"]
+
+
+def test_zipfian_traffic_identical_across_worker_counts(searcher):
+    """The load model is independent of the serving side: the same seed
+    replays the same query ids and arrival times no matter how many
+    workers serve it, and both servers return bit-identical results."""
+    m = 16
+    ids = {}
+    results = {}
+    for workers in (1, 3):
+        traffic = ZipfianTraffic(searcher.index.n, alpha=1.1, seed=13)
+        ids[workers] = traffic.ids(m)
+        offs = traffic.arrival_offsets(m, rate_qps=5000.0)
+        with SearchServer(searcher, max_batch=4, max_delay_s=0.002,
+                          topk=5, num_workers=workers) as srv:
+            handles = [srv.submit(
+                np.asarray(searcher.index.words_host[i]))
+                for i in ids[workers]]
+            results[workers] = [h.result(timeout=60.0) for h in handles]
+        ids[f"offs{workers}"] = offs
+    np.testing.assert_array_equal(ids[1], ids[3])
+    np.testing.assert_array_equal(ids["offs1"], ids["offs3"])
+    for a, b in zip(results[1], results[3]):
+        assert np.array_equal(a.indices, b.indices)
+        assert np.array_equal(a.scores, b.scores)
+
+
+# ---------------------------------------------------------------------------
 # Live appends under readers
 # ---------------------------------------------------------------------------
 
@@ -351,6 +548,39 @@ def test_serve_cli_smoke_flag_both_ways():
                           "--max-delay-ms", "2.5"])
     assert args.serve and args.rate == 123.0 and args.max_delay_ms == 2.5
     assert ap.parse_args([]).serve is False
+    # multi-worker + admission knobs parse and default sanely
+    args = ap.parse_args(["--index", "--serve", "--workers", "4",
+                          "--admission", "shed-oldest",
+                          "--max-queue", "64",
+                          "--deadline-budget-ms", "20"])
+    assert args.workers == 4 and args.admission == "shed-oldest"
+    assert args.max_queue == 64 and args.deadline_budget_ms == 20.0
+    defaults = ap.parse_args([])
+    assert defaults.workers is None and defaults.admission == "none"
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--admission", "drop-everything"])
+
+
+def test_roofline_search_model():
+    """The serving benchmark's analytic roofline terms: corpus-stream
+    dominance, linear scaling, and the gap/bandwidth arithmetic."""
+    from repro.roofline.search import exact_scan_cost, roofline_gap
+    c1 = exact_scan_cost(10_000, 32, 8, topk=10)
+    c2 = exact_scan_cost(20_000, 32, 8, topk=10)
+    assert c2["corpus_bytes"] == 2 * c1["corpus_bytes"]
+    assert c1["corpus_bytes"] == 10_000 * 32 * 4
+    assert c2["bytes"] > c1["bytes"] and c2["flops"] == 2 * c1["flops"]
+    # batching amortizes the corpus stream: bytes/query shrinks with q
+    c_batched = exact_scan_cost(10_000, 32, 64, topk=10)
+    assert c_batched["bytes_per_query"] < c1["bytes_per_query"]
+    g = roofline_gap(819e9, 2.0, bw=819e9)     # 1s of traffic in 2s
+    assert g["gap"] == pytest.approx(2.0)
+    assert g["predicted_s"] == pytest.approx(1.0)
+    assert g["achieved_gbps"] == pytest.approx(819e9 / 2.0 / 1e9)
+    with pytest.raises(ValueError):
+        exact_scan_cost(0, 32, 8)
+    with pytest.raises(ValueError):
+        roofline_gap(0.0, 1.0)
 
 
 def test_zipfian_traffic_deterministic_and_skewed():
