@@ -9,7 +9,11 @@ a comma-separated list selects exact module names and errors on unknown
 ones (no more silently matching nothing on a typo).  ``--repeat N`` runs
 each selected module N times and reports the per-row MEDIAN wall-clock
 (plus min/max spread), so scaling numbers stop being single-sample
-noise; ``--json PATH`` writes the final rows as a JSON artifact.
+noise; ``--json PATH`` writes a ``{"rows": [...], "metrics": {...}}``
+artifact -- ``rows`` is the measurement list, ``metrics`` maps each
+module to the ``repro.obs`` registry snapshot taken right after it ran
+(the registry is reset before each module, so snapshots don't bleed
+across modules).
 """
 
 from __future__ import annotations
@@ -101,7 +105,10 @@ def main() -> None:
         ap.error("--repeat must be >= 1")
     selected = _selector(args.only)
 
+    from repro.obs.metrics import get_registry
+
     all_rows = []
+    metrics = {}
     failures = []
     ran = 0
     for mod_name, paper_ref in MODULES:
@@ -109,10 +116,14 @@ def main() -> None:
             continue
         ran += 1
         t0 = time.perf_counter()
+        get_registry().reset()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             rows = _median_merge([mod.run() for _ in range(args.repeat)])
             all_rows.extend(rows)
+            snap = get_registry().snapshot()
+            if snap:
+                metrics[mod_name] = snap
             dt = time.perf_counter() - t0
             print(f"# {mod_name} ({paper_ref}): {len(rows)} rows "
                   f"in {dt:.1f}s"
@@ -124,8 +135,9 @@ def main() -> None:
             traceback.print_exc()
     print(fmt_rows(all_rows))
     if args.json and not failures:
-        doc = [{"name": name, "us_per_call": us, **derived}
-               for name, us, derived in all_rows]
+        doc = {"rows": [{"name": name, "us_per_call": us, **derived}
+                        for name, us, derived in all_rows],
+               "metrics": metrics}
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
     if not ran:

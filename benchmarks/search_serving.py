@@ -27,10 +27,20 @@ corpus:
   * predicted vs measured bytes/flush for the exact hamming scan
     (``repro.roofline.search``): each load row carries the memory-bound
     prediction and the measured roofline gap, the autotuning lane's
-    steering metric.
+    steering metric,
+  * the cost of the observability layer itself
+    (``serving/instrumentation_overhead``): the same closed-loop run
+    with tracing+metrics enabled vs bare, median of 3 interleaved runs
+    each -- the instrumented server must stay within 2% q/s of bare.
 
 ``--json PATH`` writes the rows as a JSON artifact (uploaded by the
 slow-tier AND the multidevice CI jobs next to ``search_scaling.json``).
+``--metrics-port P`` serves the live ``repro.obs`` registry over HTTP
+while the benchmark runs; ``--prom-out PATH`` saves the last good
+Prometheus scrape (taken by a background scraper thread, i.e. a real
+scrape under load, falling back to a direct registry dump);
+``--trace-out PATH`` enables the global tracer and writes the
+Perfetto-loadable trace-event JSON on exit.
 """
 
 from __future__ import annotations
@@ -39,6 +49,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 import tempfile
 import threading
 import time
@@ -136,6 +147,23 @@ def _drive(router, words_of, n_docs: int, rate: float, m: int, seed: int,
     return snap
 
 
+def _closed_loop_qps(router, words_of, n_docs: int, m: int,
+                     tracer, registry) -> float:
+    """Closed-loop throughput through one dispatch worker: submit m
+    requests back to back, wait for all; q/s over wall clock.  The
+    tracer/registry are injected so the instrumentation-overhead row can
+    compare enabled vs disabled on otherwise identical servers."""
+    server = SearchServer(router, max_batch=MAX_BATCH,
+                          max_delay_s=MAX_DELAY_S, topk=TOPK, mode="exact",
+                          num_workers=1, registry=registry, tracer=tracer)
+    with server:
+        t0 = time.monotonic()
+        handles = [server.submit(words_of(i % n_docs)) for i in range(m)]
+        for h in handles:
+            h.result(timeout=120.0)
+        return m / (time.monotonic() - t0)
+
+
 def _load_fields(snap: dict, n_docs: int, words: int) -> dict:
     """The shared per-load row payload: latency/throughput, admission
     outcomes, per-worker occupancy, and the roofline comparison for the
@@ -208,6 +236,31 @@ def run() -> list[Row]:
             "acceptance": "micro-batched results == direct search(), "
                           "single- and multi-worker",
             "ok": bool(identical[1] and identical[MULTI_WORKERS])}))
+
+        # -- instrumentation overhead: tracing must stay off the hot path
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.trace import Tracer
+        m_over = 256
+        _closed_loop_qps(router, words_of, n0, m_over,
+                         Tracer(enabled=False), MetricsRegistry())  # warm
+        bare, instr = [], []
+        for _ in range(3):                  # interleave to share drift
+            bare.append(_closed_loop_qps(
+                router, words_of, n0, m_over,
+                Tracer(enabled=False), MetricsRegistry()))
+            instr.append(_closed_loop_qps(
+                router, words_of, n0, m_over,
+                Tracer(enabled=True), MetricsRegistry()))
+        bare_qps, instr_qps = sorted(bare)[1], sorted(instr)[1]
+        overhead = 1.0 - instr_qps / bare_qps
+        rows.append(("serving/instrumentation_overhead", 0.0, {
+            "bare_qps": round(bare_qps, 1),
+            "instrumented_qps": round(instr_qps, 1),
+            "overhead_frac": round(overhead, 4),
+            "requests_per_run": m_over, "runs_each": 3,
+            "acceptance": "full tracing + metrics registry cost < 2% "
+                          "q/s vs a bare server (median of 3)",
+            "ok": bool(overhead < 0.02)}))
 
         # -- latency/throughput vs offered load, 1 vs N workers ----------
         qps_by_workers = {}
@@ -297,12 +350,84 @@ def run() -> list[Row]:
     return rows
 
 
+class _Scraper(threading.Thread):
+    """Background thread that keeps re-scraping /metrics while the
+    benchmark runs, keeping the LAST GOOD body -- so ``--prom-out`` is a
+    real scrape taken under serving load, not a post-mortem dump."""
+
+    def __init__(self, url: str, period_s: float = 0.25):
+        super().__init__(daemon=True)
+        self.url = url
+        self.period_s = period_s
+        self.last: str = ""
+        self.scrapes = 0
+        # NB: not named _stop -- that would shadow threading.Thread._stop
+        self._halt = threading.Event()
+
+    def run(self) -> None:
+        import urllib.request
+        while not self._halt.is_set():
+            try:
+                with urllib.request.urlopen(self.url, timeout=5.0) as r:
+                    self.last = r.read().decode("utf-8")
+                    self.scrapes += 1
+            except OSError:
+                pass                       # keep the previous good scrape
+            self._halt.wait(self.period_s)
+
+    def stop(self) -> None:
+        self._halt.set()
+        self.join(timeout=10.0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live Prometheus metrics on this port "
+                         "while the benchmark runs (0 = ephemeral)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the last good /metrics scrape here "
+                         "(implies a background scraper when "
+                         "--metrics-port is up)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable request tracing; write trace-event "
+                         "JSON here on exit")
     args = ap.parse_args()
-    rows = run()
+
+    from repro.obs.metrics import get_registry
+    from repro.obs.trace import get_tracer
+
+    exporter = scraper = None
+    if args.metrics_port is not None:
+        from repro.obs.export import start_http_exporter
+        exporter = start_http_exporter(port=args.metrics_port)
+        print(f"# metrics: {exporter.url}/metrics", file=sys.stderr)
+        if args.prom_out:
+            scraper = _Scraper(exporter.url + "/metrics")
+            scraper.start()
+    if args.trace_out:
+        get_tracer().reset(enabled=True)
+    try:
+        rows = run()
+    finally:
+        if scraper is not None:
+            scraper.stop()
+        if args.prom_out:
+            text = scraper.last if (scraper and scraper.last) \
+                else get_registry().prometheus_text()
+            with open(args.prom_out, "w") as f:
+                f.write(text)
+            print(f"# prom-out: {args.prom_out} "
+                  f"({scraper.scrapes if scraper else 0} live scrapes)",
+                  file=sys.stderr)
+        if args.trace_out:
+            n_ev = get_tracer().export(args.trace_out)
+            print(f"# trace-out: {args.trace_out} ({n_ev} events)",
+                  file=sys.stderr)
+        if exporter is not None:
+            exporter.close()
     print(fmt_rows(rows))
     if args.json:
         doc = [{"name": name, "us_per_call": us, **derived}

@@ -101,6 +101,40 @@ class LoaderStats:
     io_errors: int = 0
 
 
+# LoaderStats field -> (metric name, help); every field is monotone, so
+# they all export as counters through ``loader_collector``
+_LOADER_METRICS = {
+    "load_seconds": ("data_loader_seconds_total",
+                     "wall clock spent reading shards"),
+    "chunks": ("data_loader_chunks_total", "chunks yielded"),
+    "bytes_read": ("data_loader_bytes_read_total", "shard bytes read"),
+    "straggler_retries": ("data_loader_straggler_retries_total",
+                          "reads retried for exceeding the deadline"),
+    "shard_reassignments": ("data_loader_shard_reassignments_total",
+                            "slow reads kept after exhausted retries"),
+    "io_errors": ("data_loader_io_errors_total",
+                  "OSErrors absorbed by the retry loop"),
+}
+
+
+def loader_collector(role: str):
+    """Registry collector factory over one ``LoaderStats`` holder.
+
+    ``role`` labels which pipeline the stats belong to (``"load"`` = raw
+    shard reads, ``"replay"`` = cached signature-shard replay); several
+    live loaders with the same role sum into one process total.  Used as
+    ``get_registry().register_object(stats, loader_collector("load"))``.
+    """
+    from repro.obs.metrics import Sample
+    labels = (("role", role),)
+
+    def collect(stats: LoaderStats):
+        for field, (name, help) in _LOADER_METRICS.items():
+            yield Sample(name, "counter", help, labels,
+                         float(getattr(stats, field)))
+    return collect
+
+
 def read_with_retries(reader, path: str, stats: LoaderStats, *,
                       deadline: float, max_retries: int):
     """Straggler/IO-aware shard read, shared by ``ChunkedLoader`` and the
@@ -238,6 +272,8 @@ class ChunkedLoader:
         self.max_retries = max_retries
         self.lane_multiple = lane_multiple
         self.stats = LoaderStats()
+        from repro.obs.metrics import get_registry
+        get_registry().register_object(self.stats, loader_collector("load"))
         # examples per shard index, recorded as shards are read; lets a
         # consumer resume mid-stream (``resume_point`` + ``iter_from``)
         self.shard_examples: dict = {}

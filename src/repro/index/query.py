@@ -63,10 +63,61 @@ from repro.index.banding import band_keys_packed
 from repro.index.builder import SigIndex
 from repro.kernels import PackedSignatures, packed_match
 from repro.kernels.hamming import _packed_match_run
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
 
-# trace-time side effect counters, read by tests: a second flush with the
-# same (query batch, corpus window, topk, block) must be a jit-cache hit
-TRACE_COUNTS = {"exact_scan": 0}
+# jit-retrace accounting, read by tests: a second flush with the same
+# (query batch, corpus window, topk, block) must be a jit-cache hit.
+# Lives in the metrics registry (scrapeable while serving); the mapping
+# below names the registry counter behind each legacy TRACE_COUNTS key.
+_TRACE_METRICS = {"exact_scan": "index_exact_scan_retraces_total"}
+
+
+class _TraceCounts:
+    """Backward-compat, dict-like view over the registry retrace
+    counters -- the old module-global mutable ``TRACE_COUNTS`` dict.
+
+    Reads resolve the live registry counter (so ``set_registry`` /
+    ``registry.reset()`` behave); writes only move forward (``+= n``
+    increments the counter -- counters cannot go down; zero them via
+    ``repro.obs.get_registry().reset()``).
+    """
+
+    @staticmethod
+    def _family(key: str):
+        return get_registry().counter(
+            _TRACE_METRICS[key],
+            "jit retraces of the fused exact scan (0 on a cache hit)")
+
+    def __getitem__(self, key: str) -> int:
+        return int(self._family(key).value)
+
+    def __setitem__(self, key: str, value: int) -> None:
+        fam = self._family(key)
+        delta = value - fam.value
+        if delta < 0:
+            raise ValueError(
+                f"TRACE_COUNTS[{key!r}] only goes up (registry counter); "
+                f"reset via repro.obs.get_registry().reset()")
+        fam.inc(delta)
+
+    def __iter__(self):
+        return iter(_TRACE_METRICS)
+
+    def __contains__(self, key) -> bool:
+        return key in _TRACE_METRICS
+
+    def __len__(self) -> int:
+        return len(_TRACE_METRICS)
+
+    def keys(self):
+        return _TRACE_METRICS.keys()
+
+    def get(self, key, default=None):
+        return self[key] if key in _TRACE_METRICS else default
+
+
+TRACE_COUNTS = _TraceCounts()
 
 
 def resemblance_scores(matches: jax.Array, both_empty: Optional[jax.Array],
@@ -338,7 +389,9 @@ class _BatchedAdmission:
             qsizes = np.asarray(sizes, np.uint32)
         else:
             qsizes = None
-        res = self.search(batch, topk, mode=mode, query_sizes=qsizes)
+        with get_tracer().span("search_dispatch",
+                               args={"mode": mode, "batch": len(tickets)}):
+            res = self.search(batch, topk, mode=mode, query_sizes=qsizes)
         return {t: SearchResult(res.indices[i:i + 1], res.scores[i:i + 1],
                                 None if res.n_candidates is None
                                 else res.n_candidates[i:i + 1])

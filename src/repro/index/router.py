@@ -75,7 +75,30 @@ from repro.index.builder import (MANIFEST_NAME, SigIndex, append_index,
 from repro.index.query import (IndexSearcher, SearchResult, _BatchedAdmission,
                                _query_words, exact_scan_ids, lsh_rerank_ids)
 from repro.kernels import PackedSignatures
+from repro.obs.metrics import Sample, get_registry
+from repro.obs.trace import get_tracer
 from repro.sharding.rules import data_axis_devices, place_shards
+
+
+def _router_samples(router: "ShardedIndex"):
+    """Registry collector over one live ``ShardedIndex`` (weakref'd):
+    the per-instance mesh-dispatch ints (kept per-instance -- tests pin
+    them) roll up into process counters, plus the served manifest
+    generation / corpus size as gauges."""
+    state = router._state
+    yield Sample("index_mesh_dispatches_total", "counter",
+                 "shard_map collective dispatches taken",
+                 (("mode", "exact"),), float(router.mesh_exact_dispatches))
+    yield Sample("index_mesh_dispatches_total", "counter",
+                 "shard_map collective dispatches taken",
+                 (("mode", "lsh"),), float(router.mesh_lsh_dispatches))
+    yield Sample("index_generation", "gauge",
+                 "manifest generation currently served", (),
+                 float(state.generation))
+    yield Sample("index_docs", "gauge", "documents served", (),
+                 float(state.n))
+    yield Sample("index_shards", "gauge", "shards served", (),
+                 float(len(state.searchers)))
 
 
 def merge_topk(results: Sequence[SearchResult], offsets: Sequence[int],
@@ -269,9 +292,11 @@ class ShardedIndex(_BatchedAdmission):
         self._mesh_build_lock = threading.Lock()
         # observability: collective dispatches actually taken (tests pin
         # that the LSH path really went through ONE shard_map, not the
-        # per-shard sequential loop)
+        # per-shard sequential loop); also exported through the metrics
+        # registry by the weakref collector below
         self.mesh_exact_dispatches = 0
         self.mesh_lsh_dispatches = 0
+        get_registry().register_object(self, _router_samples)
         # Serializes state swaps so a refresh that read an older manifest
         # can never overwrite a concurrent append's newer state
         # (generations only move forward).
@@ -383,10 +408,17 @@ class ShardedIndex(_BatchedAdmission):
             if use_mesh:
                 return self._mesh_lsh(state, qwords, topk, query_sizes,
                                       qkeys)
-        pending = [c.dispatch(qwords, topk, mode=mode,
-                              query_sizes=query_sizes, qkeys=qkeys)
-                   for c in state.clients]
-        return merge_topk([p() for p in pending], state.offsets, topk)
+        tracer = get_tracer()
+        with tracer.phase("shard_dispatch",
+                          args={"mode": mode,
+                                "shards": len(state.clients)}):
+            pending = [c.dispatch(qwords, topk, mode=mode,
+                                  query_sizes=query_sizes, qkeys=qkeys)
+                       for c in state.clients]
+        with tracer.phase("harvest"):
+            results = [p() for p in pending]
+        with tracer.phase("merge"):
+            return merge_topk(results, state.offsets, topk)
 
     # -- the shard_map exact dispatcher ----------------------------------
     def _mesh_layout(self, state: _RouterState) -> dict:
@@ -516,17 +548,22 @@ class ShardedIndex(_BatchedAdmission):
                                 has_sizes=has_sizes,
                                 D_univ=layout["D_univ"],
                                 statics=layout["statics"])
-        if has_sizes:
-            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
-                              jnp.asarray(query_sizes), layout["doc_sizes"])
-        else:
-            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"])
-        # the jit output IS the cross-device gather: (D, Q, kk) partials
-        self.mesh_exact_dispatches += 1
-        out_s, out_i = np.asarray(out_s), np.asarray(out_i)
+        tracer = get_tracer()
+        with tracer.phase("mesh_dispatch", args={"mode": "exact",
+                                                 "devices": layout["D"]}):
+            if has_sizes:
+                out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
+                                  jnp.asarray(query_sizes),
+                                  layout["doc_sizes"])
+            else:
+                out_s, out_i = fn(qwords, layout["corpus"], layout["ids"])
+            # the jit output IS the cross-device gather: (D, Q, kk) partials
+            self.mesh_exact_dispatches += 1
+            out_s, out_i = np.asarray(out_s), np.asarray(out_i)
         per_dev = [SearchResult(out_i[d].astype(np.int64), out_s[d])
                    for d in range(layout["D"])]
-        return merge_topk(per_dev, [0] * layout["D"], topk)
+        with tracer.phase("merge"):
+            return merge_topk(per_dev, [0] * layout["D"], topk)
 
     # -- the shard_map LSH dispatcher ------------------------------------
     def _mesh_lsh_fn(self, *, kk: int, has_sizes: bool, D_univ: int,
@@ -589,10 +626,13 @@ class ShardedIndex(_BatchedAdmission):
         if has_sizes and query_sizes is None:
             raise ValueError("index stores set sizes; pass query_sizes "
                              "to search() for the exact Theorem-1 rerank")
+        tracer = get_tracer()
         D, q = layout["D"], qwords.shape[0]
         cand_cols: List[List[np.ndarray]] = [[] for _ in range(D)]
         mem_cols: List[List[np.ndarray]] = [[] for _ in range(D)]
         n_cand = np.zeros(q, np.int64)
+        cand_span = tracer.start_span("candidates",
+                                      args={"shards": len(state.searchers)})
         for s, searcher in enumerate(state.searchers):
             d, pos = layout["shard_pos"][s]
             per_q = searcher.index.candidates_batch(qkeys)
@@ -609,6 +649,7 @@ class ShardedIndex(_BatchedAdmission):
                 member[i, np.searchsorted(union, c)] = True
             cand_cols[d].append((pos + union).astype(np.int32))
             mem_cols[d].append(member)
+        tracer.end_span(cand_span)
         widths = [sum(a.size for a in cols) for cols in cand_cols]
         if max(widths) == 0:
             return SearchResult(np.full((q, topk), -1, np.int64),
@@ -631,18 +672,21 @@ class ShardedIndex(_BatchedAdmission):
         fn = self._mesh_lsh_fn(kk=kk, has_sizes=has_sizes,
                                D_univ=layout["D_univ"],
                                statics=layout["statics"])
-        if has_sizes:
-            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
-                              cand, member, jnp.asarray(query_sizes),
-                              layout["doc_sizes"])
-        else:
-            out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
-                              cand, member)
-        self.mesh_lsh_dispatches += 1
-        out_s, out_i = np.asarray(out_s), np.asarray(out_i)
+        with tracer.phase("mesh_dispatch", args={"mode": "lsh",
+                                                 "devices": D}):
+            if has_sizes:
+                out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
+                                  cand, member, jnp.asarray(query_sizes),
+                                  layout["doc_sizes"])
+            else:
+                out_s, out_i = fn(qwords, layout["corpus"], layout["ids"],
+                                  cand, member)
+            self.mesh_lsh_dispatches += 1
+            out_s, out_i = np.asarray(out_s), np.asarray(out_i)
         per_dev = [SearchResult(out_i[d].astype(np.int64), out_s[d])
                    for d in range(D)]
-        merged = merge_topk(per_dev, [0] * D, topk)
+        with tracer.phase("merge"):
+            merged = merge_topk(per_dev, [0] * D, topk)
         return SearchResult(merged.indices, merged.scores, n_cand)
 
     # -- live growth -----------------------------------------------------

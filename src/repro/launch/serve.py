@@ -137,6 +137,18 @@ def serve_index(args) -> None:
 def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
     """Open-loop serving: SearchServer under Zipf/Poisson traffic."""
     from repro.launch.server import RequestShed, SearchServer, ZipfianTraffic
+    from repro.obs.trace import get_tracer
+
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs.export import start_http_exporter
+        exporter = start_http_exporter(port=args.metrics_port)
+        print(f"metrics: {exporter.url}/metrics "
+              f"(JSON {exporter.url}/metrics.json, "
+              f"trace {exporter.url}/trace)")
+    tracer = get_tracer()
+    if args.trace_out:
+        tracer.reset(enabled=True)
 
     traffic = ZipfianTraffic(n_total, alpha=args.zipf_alpha, seed=1)
     m = args.requests * args.queries
@@ -151,21 +163,29 @@ def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
                           admission=args.admission,
                           max_queue=args.max_queue,
                           deadline_budget_s=budget)
-    with server:
-        t_start = time.monotonic()
-        handles = []
-        for doc, at in zip(ids, arrivals):
-            lag = at - (time.monotonic() - t_start)
-            if lag > 0:
-                time.sleep(lag)
-            handles.append(server.submit(words_of(int(doc)),
-                                         deadline_s=budget))
-        for h in handles:
-            try:
-                h.result(timeout=120.0)
-            except RequestShed:
-                pass                    # accounted in stats.shed
-        elapsed = time.monotonic() - t_start
+    try:
+        with server:
+            t_start = time.monotonic()
+            handles = []
+            for doc, at in zip(ids, arrivals):
+                lag = at - (time.monotonic() - t_start)
+                if lag > 0:
+                    time.sleep(lag)
+                handles.append(server.submit(words_of(int(doc)),
+                                             deadline_s=budget))
+            for h in handles:
+                try:
+                    h.result(timeout=120.0)
+                except RequestShed:
+                    pass                # accounted in stats.shed
+            elapsed = time.monotonic() - t_start
+    finally:
+        if args.trace_out:
+            n_ev = tracer.export(args.trace_out)
+            print(f"trace: wrote {n_ev} events to {args.trace_out} "
+                  "(open in https://ui.perfetto.dev)")
+        if exporter is not None:
+            exporter.close()
     snap = server.stats.snapshot()
     print(f"served {snap['requests']} requests in {snap['batches']} "
           f"micro-batches over {snap['workers']} worker(s) "
@@ -261,6 +281,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--deadline-budget-ms", type=float, default=None,
                     help="per-request latency budget the admission "
                          "policy defends (--serve)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live Prometheus metrics on this port "
+                         "(/metrics, /metrics.json, /trace; 0 = "
+                         "ephemeral; --serve)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable request tracing and write the "
+                         "Perfetto-loadable trace-event JSON here on "
+                         "exit (--serve)")
     return ap
 
 

@@ -74,11 +74,14 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.index.query import _BatchedAdmission
+from repro.obs.metrics import Sample, get_registry
+from repro.obs.trace import get_tracer
+from repro.roofline.search import exact_scan_cost, roofline_gap
 
 
 def _percentile(samples, q: float) -> float:
@@ -102,7 +105,7 @@ class PendingResult:
 
     __slots__ = ("t_submit", "deadline", "query", "query_size",
                  "_event", "_result", "_error", "queue_wait_s", "latency_s",
-                 "outcome", "degrade")
+                 "outcome", "degrade", "t_admit", "trace")
 
     def __init__(self, query, query_size, deadline: Optional[float]):
         self.query = query
@@ -113,6 +116,8 @@ class PendingResult:
         self.latency_s: Optional[float] = None
         self.outcome = "pending"
         self.degrade = False              # admission marked: serve via LSH
+        self.t_admit = self.t_submit      # end of admission (set if traced)
+        self.trace = None                 # per-request root Span, or None
         self._event = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None
@@ -226,6 +231,84 @@ class ServerStats:
         return out
 
 
+def _summary_samples(name: str, help: str, vals: List[float],
+                     labels: Tuple = ()):
+    """Reservoir -> Prometheus summary samples (windowed, like the
+    ``ServerStats`` percentile snapshot: count/sum cover the retained
+    window, not all time)."""
+    vals = sorted(vals)
+    for q in (0.5, 0.99):
+        v = (vals[min(len(vals) - 1, int(q * len(vals)))] if vals
+             else float("nan"))
+        yield Sample(name, "summary", help,
+                     labels + (("quantile", f"{q:g}"),), float(v))
+    yield Sample(name, "summary", help, labels, float(sum(vals)),
+                 suffix="_sum")
+    yield Sample(name, "summary", help, labels, float(len(vals)),
+                 suffix="_count")
+
+
+def _server_samples(server: "SearchServer"):
+    """Registry collector over one live ``SearchServer`` (weakref'd by
+    ``MetricsRegistry.register_object``): ``ServerStats`` counters, the
+    live queue depth, per-worker flushes/busy-time/occupancy, and the
+    latency reservoirs as windowed summaries.  Several live servers
+    sharing a registry sum their counters (one process-wide total)."""
+    st = server.stats
+    with st.lock:
+        counters = {
+            "serve_requests_total": (st.requests, "requests served"),
+            "serve_shed_total": (st.shed,
+                                 "requests dropped by admission control"),
+            "serve_degraded_total": (st.degraded,
+                                     "requests served via degrade-to-lsh"),
+            "serve_errors_total": (st.errors, "failed flushes/submits"),
+            "serve_deadline_misses_total": (st.deadline_misses,
+                                            "results landed past deadline"),
+            "serve_refreshes_total": (st.refreshes,
+                                      "manifest refreshes that moved state"),
+            "serve_batches_total": (st.batches, "micro-batches flushed"),
+        }
+        triggers = {"full": st.flush_full, "aged": st.flush_aged,
+                    "deadline": st.flush_deadline, "drain": st.flush_drain}
+        flushes = list(st.worker_flushes)
+        busy = list(st.worker_busy_s)
+        t_start = st.t_start
+        reservoirs = {
+            "serve_queue_wait_seconds": ("admission -> batch pop",
+                                         list(st.queue_wait_s)),
+            "serve_flush_seconds": ("one batch dispatch+harvest",
+                                    list(st.flush_s)),
+            "serve_latency_seconds": ("admission -> resolution",
+                                      list(st.latency_s)),
+            "serve_batch_size": ("requests per flushed batch",
+                                 [float(v) for v in st.batch_sizes]),
+        }
+    for name, (v, help) in counters.items():
+        yield Sample(name, "counter", help, (), float(v))
+    for trig, v in triggers.items():
+        yield Sample("serve_flushes_total", "counter",
+                     "flushes by trigger", (("trigger", trig),), float(v))
+    yield Sample("serve_queue_depth", "gauge",
+                 "requests waiting in the admission queue", (),
+                 float(len(server._queue)))
+    yield Sample("serve_workers", "gauge", "dispatch workers", (),
+                 float(st.workers))
+    elapsed = (time.monotonic() - t_start) if t_start else None
+    for i in range(len(flushes)):
+        lbl = (("worker", str(i)),)
+        yield Sample("serve_worker_flushes_total", "counter",
+                     "flushes per dispatch worker", lbl, float(flushes[i]))
+        yield Sample("serve_worker_busy_seconds_total", "counter",
+                     "flush wall-clock per dispatch worker", lbl,
+                     float(busy[i]))
+        occ = busy[i] / elapsed if elapsed and elapsed > 0 else float("nan")
+        yield Sample("serve_worker_occupancy", "gauge",
+                     "busy time / wall time per dispatch worker", lbl, occ)
+    for name, (help, vals) in reservoirs.items():
+        yield from _summary_samples(name, help, vals)
+
+
 class _WorkerHandle(_BatchedAdmission):
     """One dispatch worker's private batched-admission state over the
     SHARED searcher.
@@ -284,7 +367,8 @@ class SearchServer:
                  num_workers: Optional[int] = None,
                  admission: str = "none",
                  max_queue: Optional[int] = None,
-                 deadline_budget_s: Optional[float] = None):
+                 deadline_budget_s: Optional[float] = None,
+                 registry=None, tracer=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if mode not in ("exact", "lsh"):
@@ -313,6 +397,29 @@ class SearchServer:
         self.max_queue = max_queue
         self.deadline_budget_s = deadline_budget_s
         self.stats = ServerStats(workers=num_workers)
+        # observability: this server's counters/reservoirs export through
+        # the (default: process-wide) registry -- a weakref collector, so
+        # registration never outlives the server -- and per-request span
+        # trees go to the tracer (disabled by default: off the hot path).
+        # Tests needing totals in isolation pass private instances.
+        self.registry = registry if registry is not None else get_registry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.registry.register_object(self, _server_samples)
+        # live roofline gauges, updated per exact flush: the autotuning
+        # signal (predicted-vs-measured flush bytes/time) at serve time
+        g = self.registry.gauge
+        self._g_roofline = {
+            "bytes": g("serve_roofline_predicted_bytes",
+                       "exact_scan_cost HBM bytes for the last flush"),
+            "predicted_s": g("serve_roofline_predicted_seconds",
+                             "memory-bound time prediction, last flush"),
+            "measured_s": g("serve_roofline_measured_seconds",
+                            "measured wall clock of the last exact flush"),
+            "gap": g("serve_roofline_gap",
+                     "measured / predicted flush time (1.0 = at roofline)"),
+            "gbps": g("serve_roofline_achieved_gbps",
+                      "effective streaming bandwidth of the last flush"),
+        }
         self._queue: Deque[PendingResult] = collections.deque()
         self._cond = threading.Condition()
         self._refresh_lock = threading.Lock()
@@ -396,6 +503,25 @@ class SearchServer:
             else:
                 self._admit(req, budget)
             self._cond.notify_all()
+        tracer = self.tracer
+        if tracer.enabled:
+            # root async span: [t_submit, resolution]; "admission" is its
+            # first child, so the per-request children partition the
+            # request's recorded end-to-end latency exactly
+            root = tracer.start_span("request", t0=req.t_submit,
+                                     kind="async",
+                                     args={"deadline_s": deadline_s})
+            root.trace_id = root.span_id
+            req.trace = root
+            req.t_admit = time.monotonic()
+            tracer.add_span("admission", req.t_submit, req.t_admit,
+                            parent=root, kind="async",
+                            args={"policy": self.admission,
+                                  "degrade": req.degrade})
+            if req.outcome == "shed":      # rejected on arrival
+                tracer.end_span(root, t1=req.t_admit,
+                                args={"outcome": "shed"})
+                req.trace = None
         return req
 
     def _projected_wait_s(self, depth: int) -> float:
@@ -414,6 +540,11 @@ class SearchServer:
         with self.stats.lock:
             self.stats.shed += 1
         req._resolve(None, RequestShed(why), outcome="shed")
+        if req.trace is not None:          # shed-oldest: already traced
+            self.tracer.end_span(req.trace,
+                                 t1=req.t_submit + req.latency_s,
+                                 args={"outcome": "shed"})
+            req.trace = None
 
     def _admit(self, req: PendingResult, budget: Optional[float]) -> None:
         """Apply the admission policy (caller holds ``_cond``)."""
@@ -507,21 +638,28 @@ class SearchServer:
                      wi: int, handle: _WorkerHandle) -> None:
         t0 = time.monotonic()
         stats = self.stats
+        tracer = self.tracer
         degraded = bool(batch[0].degrade and self.mode == "exact")
         mode = "lsh" if degraded else self.mode
         outcome = "degraded" if degraded else "served"
         with stats.lock:
             setattr(stats, f"flush_{trigger}",
                     getattr(stats, f"flush_{trigger}") + 1)
+        if tracer.enabled:
+            tracer.take_phases()         # drop a prior flush's stale notes
+        wf = tracer.start_span("worker_flush", t0=t0,
+                               args={"worker": wi, "trigger": trigger,
+                                     "mode": mode, "batch": len(batch)})
         if self.refresh and self._refresh_lock.acquire(blocking=False):
             # one worker refreshes per flush wave; the rest serve the
             # snapshot they'd have gotten anyway (keep serving on a
             # failed refresh, too)
             try:
                 try:
-                    if self.searcher.refresh():
-                        with stats.lock:
-                            stats.refreshes += 1
+                    with tracer.span("refresh", parent=wf):
+                        if self.searcher.refresh():
+                            with stats.lock:
+                                stats.refreshes += 1
                 except Exception:
                     with stats.lock:
                         stats.errors += 1
@@ -532,6 +670,9 @@ class SearchServer:
             r.queue_wait_s = t0 - r.t_submit
             with stats.lock:
                 stats.queue_wait_s.append(r.queue_wait_s)
+            if r.trace is not None:
+                tracer.add_span("queue", r.t_admit, t0, parent=r.trace,
+                                kind="async", args={"worker": wi})
             try:
                 tickets[handle.submit(
                     r.query, query_size=r.query_size)] = r
@@ -539,16 +680,27 @@ class SearchServer:
                 with stats.lock:
                     stats.errors += 1
                 r._resolve(None, e)
+                if r.trace is not None:
+                    tracer.end_span(r.trace,
+                                    t1=r.t_submit + r.latency_s,
+                                    args={"outcome": "error"})
+                    r.trace = None
         error: Optional[BaseException] = None
         out: Dict[int, object] = {}
         if tickets:
             try:
-                out = handle.flush(self.topk, mode=mode)
+                with tracer.jax_annotation(f"flush:w{wi}"):
+                    out = handle.flush(self.topk, mode=mode)
             except Exception as e:
                 error = e
                 with stats.lock:
                     stats.errors += 1
+        # batch-level phases the searcher noted on THIS thread (mesh
+        # dispatch, top-k merge, ...): replayed below as children of every
+        # co-batched request's span tree
+        phases = tracer.take_phases() if tracer.enabled else []
         dt = time.monotonic() - t0
+        tracer.end_span(wf, t1=t0 + dt)
         now = time.monotonic()
         with stats.lock:
             self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * dt
@@ -559,6 +711,8 @@ class SearchServer:
             stats.worker_busy_s[wi] += dt
             if degraded:
                 stats.degraded += len(tickets)
+        if tickets and not degraded and mode == "exact" and error is None:
+            self._update_roofline(len(tickets), dt)
         for ticket, r in tickets.items():
             r._resolve(out.get(ticket), error, outcome=outcome)
             with stats.lock:
@@ -566,6 +720,39 @@ class SearchServer:
                 stats.latency_s.append(r.latency_s)
                 if r.deadline is not None and now > r.deadline:
                     stats.deadline_misses += 1
+            if r.trace is not None:
+                t_res = r.t_submit + r.latency_s
+                fl = tracer.start_span("flush", parent=r.trace, t0=t0,
+                                       kind="async",
+                                       args={"worker": wi,
+                                             "trigger": trigger,
+                                             "mode": mode})
+                for name, p0, p1 in phases:
+                    tracer.add_span(name, p0, p1, parent=fl, kind="async")
+                tracer.end_span(fl, t1=t_res)
+                tracer.end_span(r.trace, t1=t_res,
+                                args={"outcome": r.outcome})
+                r.trace = None
+
+    def _update_roofline(self, n_queries: int, flush_s: float) -> None:
+        """Refresh the live roofline gauges from one measured exact flush
+        (``repro.roofline.search``): predicted HBM bytes for this corpus
+        + batch, the memory-bound time prediction, and the gap."""
+        try:
+            n = getattr(self.searcher, "n", None)
+            if n is None:
+                n = self.searcher.index.n
+            cost = exact_scan_cost(int(n), int(self.searcher.spec.words),
+                                   n_queries, topk=self.topk)
+            gap = roofline_gap(cost["bytes"], flush_s)
+        except (AttributeError, ValueError):
+            return                       # searcher without n/words, dt=0
+        g = self._g_roofline
+        g["bytes"].set(cost["bytes"])
+        g["predicted_s"].set(gap["predicted_s"])
+        g["measured_s"].set(flush_s)
+        g["gap"].set(gap["gap"])
+        g["gbps"].set(gap["achieved_gbps"])
 
 
 # ---------------------------------------------------------------------------

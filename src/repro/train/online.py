@@ -115,6 +115,36 @@ class CacheStats:
         return self.bytes_original / max(self.bytes_cached, 1)
 
 
+def _sigcache_samples(cache: "SignatureCache"):
+    """Registry collector: cache footprint gauges + lifecycle counters.
+
+    Reads ``cache.stats`` at collect time -- a repopulate (TTL eviction)
+    swaps in a fresh ``CacheStats``, and the gauges must follow it.
+    """
+    from repro.obs.metrics import Sample
+    st = cache.stats
+    gauges = (
+        ("sigcache_bytes_original", "raw shard bytes read to build the cache",
+         st.bytes_original),
+        ("sigcache_bytes_cached", "packed signature shard bytes on disk",
+         st.bytes_cached),
+        ("sigcache_bytes_payload", "signature payload bytes (k*b-bit budget)",
+         st.bytes_payload),
+        ("sigcache_shards", "signature shards tracked", st.shards),
+        ("sigcache_uncached_chunks", "chunks past max_cache_bytes (re-hashed)",
+         st.uncached_chunks),
+        ("sigcache_examples", "examples cached", st.examples),
+    )
+    for name, help, value in gauges:
+        yield Sample(name, "gauge", help, (), float(value))
+    yield Sample("sigcache_write_seconds_total", "counter",
+                 "wall clock spent writing signature shards", (),
+                 float(st.write_s))
+    yield Sample("sigcache_ttl_dropped_total", "counter",
+                 "stale shard files removed by TTL eviction", (),
+                 float(cache.ttl_dropped))
+
+
 def _wire_spec(b: int, sentinel: bool) -> Tuple[int, bool]:
     """(code_bits, sentinel_flag) for storing b-bit signatures on disk.
 
@@ -195,6 +225,11 @@ class SignatureCache:
                                             self.cache_dir,
                                             ignore_errors=True)
                            if self._owns_dir else None)
+        from repro.data.pipeline import loader_collector
+        from repro.obs.metrics import get_registry
+        reg = get_registry()
+        reg.register_object(self, _sigcache_samples)
+        reg.register_object(self.replay_stats, loader_collector("replay"))
 
     # -- stats protocol (read by OnlineTrainer as per-epoch deltas) -----
     @property

@@ -24,6 +24,19 @@ if "--xla_force_host_platform_device_count" not in os.environ["XLA_FLAGS"]:
     os.environ["XLA_FLAGS"] += " --xla_force_host_platform_device_count=8"
 
 
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """Isolate the process-wide obs singletons across tests: counters
+    accumulated by one test (e.g. retrace counts, serve totals) must not
+    bleed into the next test's snapshot.  Lazy imports keep collection
+    cheap for tests that never touch repro."""
+    yield
+    from repro.obs.metrics import get_registry
+    from repro.obs.trace import get_tracer
+    get_registry().reset()
+    get_tracer().reset(enabled=False)
+
+
 @pytest.fixture(scope="session")
 def host_devices():
     """The forced 8-CpuDevice set; skips if the forcing didn't take."""

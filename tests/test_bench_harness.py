@@ -62,7 +62,7 @@ def test_search_index_registered():
 
 def test_repeat_reports_median_and_json(monkeypatch, capsys, tmp_path):
     """--repeat N runs each module N times and reports the per-row
-    MEDIAN wall-clock; --json writes the merged rows."""
+    MEDIAN wall-clock; --json writes {"rows": ..., "metrics": ...}."""
     import json
     import types
     calls = []
@@ -84,8 +84,35 @@ def test_repeat_reports_median_and_json(monkeypatch, capsys, tmp_path):
     assert "med/row,20.0" in out                 # median of 30/10/20
     with open(out_json) as f:
         doc = json.load(f)
-    assert doc == [{"name": "med/row", "us_per_call": 20.0, "payload": 3,
-                    "repeat": 3, "us_min": 10.0, "us_max": 30.0}]
+    assert doc["rows"] == [
+        {"name": "med/row", "us_per_call": 20.0, "payload": 3,
+         "repeat": 3, "us_min": 10.0, "us_max": 30.0}]
+    assert "metrics" in doc                       # per-module obs snapshots
+
+
+def test_json_metrics_section_captures_registry(monkeypatch, capsys,
+                                                tmp_path):
+    """A module that touches the obs registry gets a metrics snapshot
+    keyed by module name; the registry resets between modules."""
+    import json
+    import types
+    from repro.obs.metrics import get_registry
+
+    mod = types.ModuleType("benchmarks.fake_obs")
+
+    def _run():
+        get_registry().counter("bench_fake_total", "test counter").inc(3)
+        return [("obs/row", 1.0, {})]
+    mod.run = _run
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_obs", mod)
+    out_json = str(tmp_path / "rows.json")
+    _run_with(monkeypatch, [("fake_obs", "x")], ["--json", out_json])
+    bench_run.main()
+    capsys.readouterr()
+    with open(out_json) as f:
+        doc = json.load(f)
+    snap = doc["metrics"]["fake_obs"]
+    assert snap["bench_fake_total"]["samples"][0]["value"] == 3.0
 
 
 def test_repeat_must_be_positive(monkeypatch):

@@ -1,0 +1,196 @@
+"""Validate observability artifacts: Prometheus exposition + trace JSON.
+
+    python tools/check_obs.py --prom PATH [--require NAME[,NAME...]]
+    python tools/check_obs.py --trace PATH [--require-spans NAME[,...]]
+
+CI runs this over the artifacts the serving benchmark writes
+(``--prom-out`` / ``--trace-out``) so a malformed exposition or a
+truncated trace fails the job instead of shipping as a green artifact.
+
+Prometheus checks (text format 0.0.4):
+  * every sample line parses (``name{labels} value`` with legal label
+    syntax), every metric name matches ``[a-zA-Z_:][a-zA-Z0-9_:]*``,
+  * ``# TYPE`` appears at most once per family, with a known type,
+  * no duplicate series (same name + label set twice),
+  * sample values parse as floats (NaN/+Inf/-Inf allowed),
+  * ``--require`` names must be present as families.
+
+Trace checks (Chrome trace-event JSON):
+  * the document is ``{"traceEvents": [...]}`` with at least one event,
+  * every event has name/ph/ts/pid/tid; "X" events also carry ``dur``,
+  * async "b"/"e" pairs balance per (id, name),
+  * span ids referenced as ``parent_id`` exist within the same trace
+    tree (0 = root),
+  * ``--require-spans`` names must appear.
+
+Exit code 0 = valid, 1 = any check failed (every failure is printed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{([^}]*)\})?\s+(\S+)(\s+\d+)?$")
+KNOWN_TYPES = {"counter", "gauge", "summary", "histogram", "untyped"}
+# suffixes Prometheus clients attach to a summary/histogram family
+FAMILY_SUFFIXES = ("_sum", "_count", "_bucket")
+
+
+def _family_of(sample_name: str, typed: dict) -> str:
+    if sample_name in typed:
+        return sample_name
+    for suf in FAMILY_SUFFIXES:
+        if sample_name.endswith(suf) and sample_name[:-len(suf)] in typed:
+            return sample_name[:-len(suf)]
+    return sample_name
+
+
+def check_prom(path: str, require: list) -> list:
+    errors = []
+    typed = {}
+    seen_series = set()
+    families = set()
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        return [f"{path}: empty exposition"]
+    for i, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                errors.append(f"{path}:{i}: malformed TYPE line: {line!r}")
+                continue
+            _, _, name, mtype = parts
+            if not NAME_RE.match(name):
+                errors.append(f"{path}:{i}: illegal metric name {name!r}")
+            if mtype not in KNOWN_TYPES:
+                errors.append(f"{path}:{i}: unknown type {mtype!r}")
+            if name in typed:
+                errors.append(f"{path}:{i}: duplicate TYPE for {name!r}")
+            typed[name] = mtype
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"{path}:{i}: unparsable sample line: {line!r}")
+            continue
+        name, _, labelstr, value = m.group(1), m.group(2), m.group(3), \
+            m.group(4)
+        if not NAME_RE.match(name):
+            errors.append(f"{path}:{i}: illegal metric name {name!r}")
+        labels = ()
+        if labelstr:
+            stripped = LABEL_RE.sub("", labelstr)
+            if stripped.strip(", "):
+                errors.append(f"{path}:{i}: malformed labels {labelstr!r}")
+            labels = tuple(sorted(LABEL_RE.findall(labelstr)))
+        series = (name, labels)
+        if series in seen_series:
+            errors.append(f"{path}:{i}: duplicate series {name}"
+                          f"{dict(labels)}")
+        seen_series.add(series)
+        families.add(_family_of(name, typed))
+        try:
+            v = float(value)
+            if not (math.isfinite(v) or math.isnan(v) or math.isinf(v)):
+                raise ValueError
+        except ValueError:
+            errors.append(f"{path}:{i}: bad sample value {value!r}")
+    for name in require:
+        if name not in families:
+            errors.append(f"{path}: required metric {name!r} missing")
+    if not errors:
+        print(f"{path}: OK ({len(seen_series)} series, "
+              f"{len(families)} families)")
+    return errors
+
+
+def check_trace(path: str, require_spans: list) -> list:
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: not valid JSON: {e}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents array (or empty)"]
+    async_depth = {}
+    names = set()
+    span_ids = set()
+    parents = []           # (trace_id, parent_id) refs to re-check
+    for j, ev in enumerate(events):
+        missing = {"name", "ph", "ts", "pid", "tid"} - set(ev)
+        if missing:
+            errors.append(f"{path}[{j}]: missing fields {sorted(missing)}")
+            continue
+        names.add(ev["name"])
+        ph = ev["ph"]
+        if ph == "X" and "dur" not in ev:
+            errors.append(f"{path}[{j}]: X event without dur")
+        if ph in ("b", "e"):
+            key = (ev.get("id"), ev["name"])
+            async_depth[key] = async_depth.get(key, 0) + (1 if ph == "b"
+                                                          else -1)
+            if async_depth[key] < 0:
+                errors.append(f"{path}[{j}]: 'e' before 'b' for {key}")
+        args = ev.get("args") or {}
+        if "span_id" in args:
+            span_ids.add(args["span_id"])
+            if args.get("parent_id", 0):
+                parents.append((j, args["parent_id"]))
+    for key, depth in async_depth.items():
+        if depth != 0:
+            errors.append(f"{path}: unbalanced async pair {key} "
+                          f"(depth {depth})")
+    for j, pid in parents:
+        if pid not in span_ids:
+            errors.append(f"{path}[{j}]: parent_id {pid} references no "
+                          f"recorded span")
+    for name in require_spans:
+        if name not in names:
+            errors.append(f"{path}: required span {name!r} missing")
+    if not errors:
+        print(f"{path}: OK ({len(events)} events, {len(names)} span names)")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prom", default=None,
+                    help="Prometheus text exposition to validate")
+    ap.add_argument("--require", default="",
+                    help="comma-separated metric families that must be "
+                         "present in --prom")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--require-spans", default="",
+                    help="comma-separated span names that must appear "
+                         "in --trace")
+    args = ap.parse_args()
+    if not args.prom and not args.trace:
+        ap.error("nothing to check: pass --prom and/or --trace")
+    errors = []
+    if args.prom:
+        errors += check_prom(
+            args.prom, [t for t in args.require.split(",") if t])
+    if args.trace:
+        errors += check_trace(
+            args.trace, [t for t in args.require_spans.split(",") if t])
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()
