@@ -31,10 +31,22 @@ corpus:
   * the cost of the observability layer itself
     (``serving/instrumentation_overhead``): the same closed-loop run
     with tracing+metrics enabled vs bare, median of 3 interleaved runs
-    each -- the instrumented server must stay within 2% q/s of bare.
+    each -- the instrumented server must stay within 2% q/s of bare,
+  * the cost of the fault-tolerance layer
+    (``serving/resilience_overhead``): the same closed-loop fan-out
+    with every shard client wrapped in ``ResilientShardClient`` vs the
+    bare local clients, median of 3 interleaved -- the healthy path
+    must stay within 3% q/s of bare,
+  * degraded serving under injected chaos (``serving/chaos_*pct``):
+    seeded ``ChaosShardClient`` faults (latency / OSError / hang /
+    drop) at 0% / 10% / 25% per-dispatch fault rates through a
+    partial-mode server -- reporting availability, achieved q/s, and
+    mean coverage; every request must resolve.
 
 ``--json PATH`` writes the rows as a JSON artifact (uploaded by the
 slow-tier AND the multidevice CI jobs next to ``search_scaling.json``).
+``--chaos-json PATH`` writes just the resilience/chaos rows (the CI
+chaos artifact).
 ``--metrics-port P`` serves the live ``repro.obs`` registry over HTTP
 while the benchmark runs; ``--prom-out PATH`` saves the last good
 Prometheus scrape (taken by a background scraper thread, i.e. a real
@@ -81,6 +93,10 @@ MULTI_WORKERS = 4
 OVERLOAD_QPS = 50_000.0          # >> capacity: forces the shedding path
 OVERLOAD_QUEUE = 32
 OVERLOAD_DEADLINE_S = 2.0
+CHAOS_RATES = (0.0, 0.10, 0.25)  # injected per-dispatch fault rates
+CHAOS_REQUESTS = 96
+CHAOS_DEADLINE_S = 0.1           # per-attempt; an injected hang blows it
+CHAOS_HANG_S = 0.4
 
 
 def _build_sigs(tmp: str, name: str, n: int, seed: int) -> list:
@@ -162,6 +178,83 @@ def _closed_loop_qps(router, words_of, n_docs: int, m: int,
         for h in handles:
             h.result(timeout=120.0)
         return m / (time.monotonic() - t0)
+
+
+def _router_closed_qps(router, words_of, m: int) -> float:
+    """Closed-loop fan-out throughput straight through the router (no
+    server): MAX_BATCH-query batches back to back, q/s over wall clock.
+    Used to price the resilience wrapper on the healthy path."""
+    n = router.n
+    t0 = time.monotonic()
+    done = 0
+    while done < m:
+        nq = min(MAX_BATCH, m - done)
+        q = np.stack([words_of((done + j) % n) for j in range(nq)])
+        router.search(q, TOPK, mode="exact")
+        done += nq
+    return m / (time.monotonic() - t0)
+
+
+def _chaos_row(shard_dir: str, fault_frac: float, seed: int) -> dict:
+    """One degraded-serving run: a partial-mode server over resilient +
+    chaos-wrapped sequential clients at the given per-dispatch fault
+    rate.  Returns availability / q/s / coverage accounting."""
+    from repro.index import ChaosSchedule, ResiliencePolicy
+    from repro.index import resilient_client_factory
+
+    policy = ResiliencePolicy(deadline_s=CHAOS_DEADLINE_S, max_retries=1,
+                              backoff_base_s=0.001, backoff_cap_s=0.01)
+    chaos = None
+    if fault_frac > 0.0:
+        chaos = lambda i: ChaosSchedule(seed=seed + i,
+                                        fault_rate=fault_frac,
+                                        latency_s=0.002,
+                                        hang_s=CHAOS_HANG_S)
+    # warm the jit caches through a plain router first: a cold compile
+    # takes seconds and would blow every per-attempt deadline below
+    plain = load_sharded(shard_dir, dispatch="sequential",
+                         corpus_block=CORPUS_BLOCK)
+    _warmup(plain, _row_reader(plain))
+    fac = resilient_client_factory(policy, chaos=chaos, seed=seed)
+    router = load_sharded(shard_dir, dispatch="sequential",
+                          corpus_block=CORPUS_BLOCK, client_factory=fac,
+                          on_shard_failure="partial")
+    words_of = _row_reader(router)
+    n = router.n
+    resolved = errors = 0
+    coverages = []
+    server = SearchServer(router, max_batch=MAX_BATCH,
+                          max_delay_s=MAX_DELAY_S, topk=TOPK,
+                          mode="exact", num_workers=2,
+                          on_shard_failure="partial")
+    with server:
+        t0 = time.monotonic()
+        handles = [server.submit(words_of(i % n))
+                   for i in range(CHAOS_REQUESTS)]
+        for h in handles:
+            try:
+                res = h.result(timeout=120.0)
+                resolved += 1
+                coverages.append(float(res.coverage))
+            except Exception:
+                errors += 1
+        elapsed = time.monotonic() - t0
+    snap = server.stats.snapshot()
+    faults = sum(sum(1 for _, k in c.fault_log if k is not None)
+                 for c in fac.chaos_clients)
+    return {
+        "fault_rate": fault_frac,
+        "availability": round(resolved / CHAOS_REQUESTS, 4),
+        "achieved_qps": round(resolved / elapsed, 1),
+        "mean_coverage": round(float(np.mean(coverages)), 4)
+        if coverages else 0.0,
+        "requests": CHAOS_REQUESTS,
+        "resolved": resolved,
+        "errors": errors,
+        "partial": snap["partial"],
+        "worker_restarts": snap["worker_restarts"],
+        "injected_faults": faults,
+    }
 
 
 def _load_fields(snap: dict, n_docs: int, words: int) -> dict:
@@ -347,6 +440,57 @@ def run() -> list[Row]:
                                        "corpus grows under the reader",
                          "ok": bool(grew and snap["errors"] == 0
                                     and snap["requests"] == N_REQUESTS)}))
+
+        # -- resilience wrapper price on the healthy path ----------------
+        from repro.index import ResiliencePolicy, resilient_client_factory
+        bare_r = load_sharded(shard_dir, dispatch="sequential",
+                              corpus_block=CORPUS_BLOCK)
+        res_r = load_sharded(
+            shard_dir, dispatch="sequential", corpus_block=CORPUS_BLOCK,
+            client_factory=resilient_client_factory(ResiliencePolicy()))
+        wb, wr = _row_reader(bare_r), _row_reader(res_r)
+        _warmup(bare_r, wb)
+        _warmup(res_r, wr)
+        picks = np.random.default_rng(12).integers(0, bare_r.n, 8)
+        q = np.stack([wb(int(i)) for i in picks])
+        a, b = bare_r.search(q, TOPK), res_r.search(q, TOPK)
+        same = bool(np.array_equal(a.indices, b.indices)
+                    and np.array_equal(a.scores, b.scores))
+        m_res = 256
+        bare_q, res_q = [], []
+        for _ in range(3):                  # interleave to share drift
+            bare_q.append(_router_closed_qps(bare_r, wb, m_res))
+            res_q.append(_router_closed_qps(res_r, wr, m_res))
+        bq, rq = sorted(bare_q)[1], sorted(res_q)[1]
+        overhead = 1.0 - rq / bq
+        rows.append(("serving/resilience_overhead", 0.0, {
+            "bare_qps": round(bq, 1),
+            "resilient_qps": round(rq, 1),
+            "overhead_frac": round(overhead, 4),
+            "bit_identical": same,
+            "requests_per_run": m_res, "runs_each": 3,
+            "acceptance": "healthy-path ResilientShardClient fan-out "
+                          "bit-identical and within 3% q/s of bare "
+                          "local clients (median of 3)",
+            "ok": bool(same and overhead < 0.03)}))
+
+        # -- degraded serving under injected chaos -----------------------
+        # (keep these LAST: the prom scrape retained at exit must still
+        # see the live partial-mode servers' serve_* collectors)
+        for j, frac in enumerate(CHAOS_RATES):
+            fields = _chaos_row(shard_dir, frac, seed=17 + 31 * j)
+            ok = fields["resolved"] == CHAOS_REQUESTS
+            if frac == 0.0:
+                ok = (ok and fields["errors"] == 0
+                      and fields["mean_coverage"] == 1.0)
+            rows.append((f"serving/chaos_{int(round(frac * 100))}pct",
+                         0.0, {
+                             **fields,
+                             "acceptance": "every request resolves under "
+                                           "seeded injected faults; "
+                                           "partial-mode coverage "
+                                           "accounted",
+                             "ok": bool(ok)}))
     return rows
 
 
@@ -384,6 +528,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--chaos-json", default=None, metavar="PATH",
+                    help="write just the resilience/chaos rows (the CI "
+                         "chaos artifact)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve live Prometheus metrics on this port "
                          "while the benchmark runs (0 = ephemeral)")
@@ -433,6 +580,13 @@ def main() -> None:
         doc = [{"name": name, "us_per_call": us, **derived}
                for name, us, derived in rows]
         with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+    if args.chaos_json:
+        doc = [{"name": name, "us_per_call": us, **derived}
+               for name, us, derived in rows
+               if name.startswith(("serving/chaos_",
+                                   "serving/resilience_overhead"))]
+        with open(args.chaos_json, "w") as f:
             json.dump(doc, f, indent=2)
 
 

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import queue
+import random
 import tempfile
 import threading
 import time
@@ -135,18 +136,35 @@ def loader_collector(role: str):
     return collect
 
 
+# process-wide jitter source for I/O retry backoff (callers needing
+# determinism inject their own seeded ``random.Random``)
+_default_backoff_rng = random.Random()
+
+
 def read_with_retries(reader, path: str, stats: LoaderStats, *,
-                      deadline: float, max_retries: int):
+                      deadline: float, max_retries: int,
+                      backoff_base_s: float = 0.05,
+                      backoff_cap_s: float = 1.0,
+                      rng=None, sleep=time.sleep):
     """Straggler/IO-aware shard read, shared by ``ChunkedLoader`` and the
     signature-cache replay path (``repro.train.online.SignatureCache``).
 
     Every attempt is accounted: an ``OSError`` bumps ``stats.io_errors``
-    and is retried; a read slower than ``deadline`` bumps
-    ``stats.straggler_retries`` (the last slow attempt is kept and counted
-    as a ``shard_reassignment``).  If all ``max_retries + 1`` attempts
-    raise, the last ``OSError`` propagates -- there is no silent
-    unaccounted re-read.
+    and is retried after an exponential backoff with jitter -- attempt
+    ``i`` sleeps ``min(backoff_cap_s, backoff_base_s * 2**i)`` scaled by
+    a uniform [0.5, 1.0) jitter factor, so a flapping filesystem is not
+    hammered in a tight loop and concurrent readers decorrelate.  A read
+    slower than ``deadline`` bumps ``stats.straggler_retries`` and
+    retries *immediately* (slow is not broken; the last slow attempt is
+    kept and counted as a ``shard_reassignment``).  If all
+    ``max_retries + 1`` attempts raise, the last ``OSError`` propagates
+    after the final attempt with no trailing sleep -- there is no silent
+    unaccounted re-read.  ``rng`` (a ``random.Random``) and ``sleep``
+    are injectable so tests can pin the exact sleep schedule with a
+    fake clock.
     """
+    if rng is None:
+        rng = _default_backoff_rng
     last_err: Optional[OSError] = None
     for attempt in range(max_retries + 1):
         t0 = time.perf_counter()
@@ -155,6 +173,9 @@ def read_with_retries(reader, path: str, stats: LoaderStats, *,
         except OSError as e:
             stats.io_errors += 1
             last_err = e
+            if attempt < max_retries:
+                delay = min(backoff_cap_s, backoff_base_s * (2.0 ** attempt))
+                sleep(delay * (0.5 + 0.5 * rng.random()))
             continue
         dt = time.perf_counter() - t0
         if dt > deadline:
@@ -261,6 +282,8 @@ class ChunkedLoader:
                  fmt: str = "binary", max_nnz: Optional[int] = None,
                  prefetch: int = 2, n_workers: int = 1,
                  straggler_deadline_s: float = 30.0, max_retries: int = 2,
+                 io_backoff_base_s: float = 0.05,
+                 io_backoff_cap_s: float = 1.0,
                  lane_multiple: int = 128):
         self.shard_paths = list(shard_paths)
         self.chunk_size = chunk_size
@@ -270,6 +293,8 @@ class ChunkedLoader:
         self.n_workers = n_workers
         self.deadline = straggler_deadline_s
         self.max_retries = max_retries
+        self.io_backoff_base_s = io_backoff_base_s
+        self.io_backoff_cap_s = io_backoff_cap_s
         self.lane_multiple = lane_multiple
         self.stats = LoaderStats()
         from repro.obs.metrics import get_registry
@@ -283,7 +308,9 @@ class ChunkedLoader:
     def _read_shard(self, path: str, worker: int):
         return read_with_retries(self._reader, path, self.stats,
                                  deadline=self.deadline,
-                                 max_retries=self.max_retries)
+                                 max_retries=self.max_retries,
+                                 backoff_base_s=self.io_backoff_base_s,
+                                 backoff_cap_s=self.io_backoff_cap_s)
 
     def _chunk_iter(self, start_shard: int = 0,
                     skip_examples: int = 0) -> Iterator[SparseBatch]:

@@ -28,7 +28,15 @@ preprocessing and learning stacks already produce:
                 per-shard top-k bit-identically to a single-index
                 search; ``ShardClient`` RPC seam; ``load_sharded`` +
                 incremental ``append`` with budgeted spill into new
-                shards.
+                shards; ``on_shard_failure="partial"`` serves the
+                surviving shards with exact ``coverage`` accounting.
+  transport.py -- the real ``ShardClient`` wire: ``ShardService``
+                (per-shard loopback-TCP frame server) +
+                ``SocketShardClient``, bit-identical to the local
+                client.
+  resilience.py -- ``ResilientShardClient`` (per-dispatch deadlines,
+                jittered retries, hedged dispatch, circuit breaker)
+                and the seeded ``ChaosShardClient`` fault injector.
 
 The scoring hot path is ``repro.kernels.hamming.packed_match`` -- a
 Pallas kernel registered in the SignatureEngine backend registry
@@ -44,14 +52,25 @@ from repro.index.builder import (IndexMeta, SigIndex, append_index,
                                  build_sharded, load_index,
                                  merge_band_tables, read_index_meta)
 from repro.index.query import IndexSearcher, SearchResult, resemblance_scores
+from repro.index.resilience import (ChaosSchedule, ChaosShardClient,
+                                    CircuitOpenError, ResiliencePolicy,
+                                    ResilientShardClient,
+                                    ShardDispatchTimeout,
+                                    resilient_client_factory)
 from repro.index.router import (LocalShardClient, ShardClient, ShardedIndex,
                                 load_sharded, merge_topk)
+from repro.index.transport import (ShardService, SocketShardClient,
+                                   TransportError, loopback_client_factory)
 
 __all__ = [
-    "BandingConfig", "IndexMeta", "IndexSearcher", "LocalShardClient",
-    "SearchResult", "ShardClient", "ShardedIndex", "SigIndex",
-    "append_index", "band_keys_from_codes", "band_keys_packed",
-    "build_band_tables", "build_index", "build_sharded",
-    "choose_band_config", "load_index", "load_sharded", "merge_band_tables",
-    "merge_topk", "read_index_meta", "resemblance_scores", "s_curve",
+    "BandingConfig", "ChaosSchedule", "ChaosShardClient", "CircuitOpenError",
+    "IndexMeta", "IndexSearcher", "LocalShardClient", "ResiliencePolicy",
+    "ResilientShardClient", "SearchResult", "ShardClient",
+    "ShardDispatchTimeout", "ShardService", "ShardedIndex", "SigIndex",
+    "SocketShardClient", "TransportError", "append_index",
+    "band_keys_from_codes", "band_keys_packed", "build_band_tables",
+    "build_index", "build_sharded", "choose_band_config", "load_index",
+    "load_sharded", "loopback_client_factory", "merge_band_tables",
+    "merge_topk", "read_index_meta", "resemblance_scores",
+    "resilient_client_factory", "s_curve",
 ]

@@ -183,11 +183,19 @@ class StreamPlan:
 @dataclasses.dataclass
 class SearchResult:
     """Top-k per query: global doc ids (-1 past the candidate count) and
-    their resemblance estimates (-inf where the id is -1)."""
+    their resemblance estimates (-inf where the id is -1).
+
+    ``coverage`` / ``failed_shards`` carry the router's degraded-mode
+    accounting (``on_shard_failure="partial"``): the fraction of corpus
+    docs actually searched and the shard indices that failed.  A full
+    healthy search leaves them at their defaults.
+    """
 
     indices: np.ndarray          # (Q, topk) int64
     scores: np.ndarray           # (Q, topk) float32
     n_candidates: Optional[np.ndarray] = None    # (Q,) for the LSH path
+    coverage: float = 1.0        # docs searched / docs total
+    failed_shards: Tuple[int, ...] = ()
 
     def __len__(self) -> int:
         return self.indices.shape[0]
@@ -394,7 +402,9 @@ class _BatchedAdmission:
             res = self.search(batch, topk, mode=mode, query_sizes=qsizes)
         return {t: SearchResult(res.indices[i:i + 1], res.scores[i:i + 1],
                                 None if res.n_candidates is None
-                                else res.n_candidates[i:i + 1])
+                                else res.n_candidates[i:i + 1],
+                                coverage=res.coverage,
+                                failed_shards=res.failed_shards)
                 for i, t in enumerate(tickets)}
 
 

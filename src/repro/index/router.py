@@ -258,12 +258,16 @@ class ShardedIndex(_BatchedAdmission):
                  max_shard_docs: Optional[int] = None,
                  client_factory: Optional[Callable[[IndexSearcher],
                                                    ShardClient]] = None,
+                 on_shard_failure: str = "fail",
                  **searcher_kwargs):
         if not indexes:
             raise ValueError("ShardedIndex needs at least one shard")
         if dispatch not in ("auto", "sequential", "mesh"):
             raise ValueError(f"dispatch must be 'auto', 'sequential' or "
                              f"'mesh', got {dispatch!r}")
+        if on_shard_failure not in ("fail", "partial"):
+            raise ValueError(f"on_shard_failure must be 'fail' or "
+                             f"'partial', got {on_shard_failure!r}")
         if dispatch == "mesh" and mesh is None:
             raise ValueError("dispatch='mesh' needs a mesh")
         if max_shard_docs is not None and max_shard_docs < 1:
@@ -281,6 +285,16 @@ class ShardedIndex(_BatchedAdmission):
         self.max_shard_docs = max_shard_docs
         self._dispatch_default = dispatch
         self._client_factory = client_factory or LocalShardClient
+        self.on_shard_failure = on_shard_failure
+        reg = get_registry()
+        self._m_shard_failures = reg.counter(
+            "index_shard_failures_total",
+            "shard dispatches that failed past their client's own "
+            "retry/breaker budget", labels=("shard",))
+        self._m_partial = reg.counter(
+            "index_partial_searches_total",
+            "searches served from surviving shards only "
+            "(on_shard_failure='partial')")
         # the mesh's data-parallel rank set, as its own 1-axis mesh: the
         # shard_map dispatch and the placement rule both address devices
         # along "data" only, whatever other axes the caller's mesh has
@@ -379,7 +393,8 @@ class ShardedIndex(_BatchedAdmission):
     def search(self, queries: Union[PackedSignatures, jax.Array, np.ndarray],
                topk: int = 10, *, mode: str = "exact",
                query_sizes: Optional[np.ndarray] = None,
-               dispatch: Optional[str] = None) -> SearchResult:
+               dispatch: Optional[str] = None,
+               on_shard_failure: Optional[str] = None) -> SearchResult:
         """Global top-k: fan out to every shard, merge.
 
         With the mesh dispatcher, both modes run as ONE ``shard_map``
@@ -394,8 +409,22 @@ class ShardedIndex(_BatchedAdmission):
         a single-index search.  The shard set is snapshotted ONCE here,
         so a concurrent ``append``/``refresh`` never tears this call's
         view.
+
+        ``on_shard_failure`` (default: the constructor's) picks what a
+        shard-client exception costs on the **sequential** fan-out:
+        ``"fail"`` re-raises it (whole query dies, the seed behavior);
+        ``"partial"`` serves the surviving shards -- the merge is then
+        bit-identical to a healthy router over just those shards, and
+        the result carries ``coverage`` (surviving docs / total docs)
+        and the failed shard indices.  The mesh dispatcher is a single
+        in-process collective with no per-shard failure domain, so the
+        policy only applies to the client fan-out.
         """
         state = self._state
+        policy = on_shard_failure or self.on_shard_failure
+        if policy not in ("fail", "partial"):
+            raise ValueError(f"on_shard_failure must be 'fail' or "
+                             f"'partial', got {policy!r}")
         qwords = _query_words(queries, state.searchers[0].index.spec)
         use_mesh = self._use_mesh(dispatch)
         if mode == "exact" and use_mesh:
@@ -409,16 +438,74 @@ class ShardedIndex(_BatchedAdmission):
                 return self._mesh_lsh(state, qwords, topk, query_sizes,
                                       qkeys)
         tracer = get_tracer()
+        if policy == "fail":
+            with tracer.phase("shard_dispatch",
+                              args={"mode": mode,
+                                    "shards": len(state.clients)}):
+                pending = [c.dispatch(qwords, topk, mode=mode,
+                                      query_sizes=query_sizes, qkeys=qkeys)
+                           for c in state.clients]
+            with tracer.phase("harvest"):
+                results = [p() for p in pending]
+            with tracer.phase("merge"):
+                return merge_topk(results, state.offsets, topk)
+        return self._fanout_partial(state, qwords, topk, mode, query_sizes,
+                                    qkeys, tracer)
+
+    def _fanout_partial(self, state: "_RouterState", qwords, topk: int,
+                        mode: str, query_sizes, qkeys,
+                        tracer) -> SearchResult:
+        """Sequential fan-out that survives shard-client failures.
+
+        A shard can fail at dispatch time (e.g. its breaker is open) or
+        at harvest time (transport fault past the retry budget); either
+        way the shard drops out and the survivors merge **with their
+        original offsets**, which is exactly what a healthy router
+        restricted to the surviving shards would return
+        (``merge_topk`` is a pure function of (score, global id)).
+        """
+        failed: dict = {}
         with tracer.phase("shard_dispatch",
                           args={"mode": mode,
                                 "shards": len(state.clients)}):
-            pending = [c.dispatch(qwords, topk, mode=mode,
-                                  query_sizes=query_sizes, qkeys=qkeys)
-                       for c in state.clients]
+            pending = []
+            for si, c in enumerate(state.clients):
+                try:
+                    pending.append(c.dispatch(qwords, topk, mode=mode,
+                                              query_sizes=query_sizes,
+                                              qkeys=qkeys))
+                except Exception as e:
+                    pending.append(None)
+                    failed[si] = e
         with tracer.phase("harvest"):
-            results = [p() for p in pending]
+            results = []
+            for si, p in enumerate(pending):
+                if p is None:
+                    results.append(None)
+                    continue
+                try:
+                    results.append(p())
+                except Exception as e:
+                    results.append(None)
+                    failed[si] = e
+        if failed:
+            for si in failed:
+                self._m_shard_failures.labels(shard=str(si)).inc()
+            if len(failed) == len(state.clients):
+                raise RuntimeError(
+                    f"all {len(state.clients)} shards failed "
+                    f"(last: {failed[max(failed)]!r})") from failed[max(failed)]
+            self._m_partial.inc()
         with tracer.phase("merge"):
-            return merge_topk(results, state.offsets, topk)
+            if not failed:
+                return merge_topk(results, state.offsets, topk)
+            keep = [si for si in range(len(results)) if si not in failed]
+            merged = merge_topk([results[si] for si in keep],
+                                state.offsets[keep], topk)
+        n_total = state.n
+        n_live = int(sum(state.searchers[si].index.n for si in keep))
+        return dataclasses.replace(merged, coverage=n_live / n_total,
+                                   failed_shards=tuple(sorted(failed)))
 
     # -- the shard_map exact dispatcher ----------------------------------
     def _mesh_layout(self, state: _RouterState) -> dict:

@@ -162,7 +162,8 @@ def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
                           num_workers=args.workers,
                           admission=args.admission,
                           max_queue=args.max_queue,
-                          deadline_budget_s=budget)
+                          deadline_budget_s=budget,
+                          on_shard_failure=args.on_shard_failure)
     try:
         with server:
             t_start = time.monotonic()
@@ -203,6 +204,11 @@ def _serve_traffic(searcher, words_of, n_total: int, args) -> None:
           f"(rate {snap['shed_rate']:.3f}) degraded={snap['degraded']} "
           f"deadline-miss rate {snap['deadline_miss_rate']:.3f}  "
           f"worker occupancy [{occ}]")
+    if args.on_shard_failure == "partial" or snap["partial"]:
+        print(f"fault tolerance: partial={snap['partial']} "
+              f"(rate {snap['partial_rate']:.3f}) "
+              f"mean coverage {snap['mean_coverage']:.3f} "
+              f"worker restarts {snap['worker_restarts']}")
 
 
 def _sharded_row_reader(sharded):
@@ -278,6 +284,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bounded admission-queue depth; beyond it the "
                          "--admission policy fires (--serve)")
+    ap.add_argument("--on-shard-failure", default=None,
+                    choices=("fail", "partial"),
+                    help="shard-failure policy threaded to the sharded "
+                         "router: 'partial' serves surviving shards with "
+                         "coverage accounting instead of failing the "
+                         "whole batch (--serve --shards)")
     ap.add_argument("--deadline-budget-ms", type=float, default=None,
                     help="per-request latency budget the admission "
                          "policy defends (--serve)")

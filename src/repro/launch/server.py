@@ -51,8 +51,19 @@ silently blowing it:
 
 A shed request's ``result()`` raises ``RequestShed``; every handle
 surfaces what happened via ``PendingResult.outcome``
-(``"served"`` / ``"shed"`` / ``"degraded"``).  ``ServerStats`` counts
-shed/degraded traffic and per-worker flush counts + busy-time
+(``"served"`` / ``"shed"`` / ``"degraded"`` / ``"partial"`` /
+``"error"``).  With a fault-tolerant router underneath
+(``SearchServer(on_shard_failure="partial")``), a shard failure past
+its client's retry/breaker budget degrades the affected flushes to the
+surviving shards instead of poisoning the whole batch: those requests
+resolve as ``"partial"`` with per-row ``coverage`` / ``failed_shards``
+annotations, counted in ``ServerStats.partial`` and the coverage
+reservoir.  Dispatch workers themselves are crash-proof: an exception
+that escapes a flush fails only the requests that worker held, bumps
+``worker_restarts`` (exported as ``serve_worker_restarts_total``), and
+the loop keeps draining with a fresh handle -- requests queued behind
+a crashed worker are never stranded.  ``ServerStats`` counts
+shed/degraded/partial traffic and per-worker flush counts + busy-time
 occupancy; all mutation happens under one lock, and ``snapshot()``
 copies before computing percentiles, so concurrent submit storms can
 never tear a reading.
@@ -99,8 +110,12 @@ class PendingResult:
 
     ``outcome`` is ``"pending"`` until resolution, then ``"served"``,
     ``"shed"`` (the admission policy dropped it -- ``result()`` raises
-    ``RequestShed``) or ``"degraded"`` (served, but through the cheaper
-    LSH path under the ``degrade-to-lsh`` overload policy).
+    ``RequestShed``), ``"degraded"`` (served, but through the cheaper
+    LSH path under the ``degrade-to-lsh`` overload policy),
+    ``"partial"`` (served from the surviving shards only under
+    ``on_shard_failure="partial"`` -- the result row carries
+    ``coverage`` / ``failed_shards``), or ``"error"`` (the flush, or
+    the worker around it, raised -- ``result()`` re-raises).
     """
 
     __slots__ = ("t_submit", "deadline", "query", "query_size",
@@ -167,6 +182,8 @@ class ServerStats:
     deadline_misses: int = 0
     shed: int = 0                 # requests dropped by the admission policy
     degraded: int = 0             # requests served via degrade-to-lsh
+    partial: int = 0              # requests served with coverage < 1
+    worker_restarts: int = 0      # dispatch loops revived after a crash
     refreshes: int = 0            # manifest refreshes that changed state
     flush_full: int = 0           # trigger: queue reached max_batch
     flush_aged: int = 0           # trigger: oldest request aged max_delay
@@ -179,11 +196,13 @@ class ServerStats:
     flush_s: Deque[float] = dataclasses.field(default=None)       # type: ignore[assignment]
     latency_s: Deque[float] = dataclasses.field(default=None)     # type: ignore[assignment]
     batch_sizes: Deque[int] = dataclasses.field(default=None)     # type: ignore[assignment]
+    coverage: Deque[float] = dataclasses.field(default=None)      # type: ignore[assignment]
     worker_flushes: List[int] = dataclasses.field(default=None)   # type: ignore[assignment]
     worker_busy_s: List[float] = dataclasses.field(default=None)  # type: ignore[assignment]
 
     def __post_init__(self):
-        for name in ("queue_wait_s", "flush_s", "latency_s", "batch_sizes"):
+        for name in ("queue_wait_s", "flush_s", "latency_s", "batch_sizes",
+                     "coverage"):
             if getattr(self, name) is None:
                 setattr(self, name, collections.deque(maxlen=self.window))
         if self.worker_flushes is None:
@@ -200,6 +219,8 @@ class ServerStats:
                    "errors": self.errors,
                    "deadline_misses": self.deadline_misses,
                    "shed": self.shed, "degraded": self.degraded,
+                   "partial": self.partial,
+                   "worker_restarts": self.worker_restarts,
                    "refreshes": self.refreshes,
                    "flush_full": self.flush_full,
                    "flush_aged": self.flush_aged,
@@ -207,6 +228,7 @@ class ServerStats:
                    "flush_drain": self.flush_drain,
                    "workers": self.workers}
             batch_sizes = list(self.batch_sizes)
+            coverage = list(self.coverage)
             samples = {"queue_wait": list(self.queue_wait_s),
                        "flush": list(self.flush_s),
                        "latency": list(self.latency_s)}
@@ -218,6 +240,9 @@ class ServerStats:
         admitted = out["requests"] + out["shed"]
         out["shed_rate"] = out["shed"] / max(admitted, 1)
         out["degraded_rate"] = out["degraded"] / max(out["requests"], 1)
+        out["partial_rate"] = out["partial"] / max(out["requests"], 1)
+        out["mean_coverage"] = (float(np.mean(coverage)) if coverage
+                                else float("nan"))
         out["deadline_miss_rate"] = (out["deadline_misses"]
                                      / max(out["requests"], 1))
         for name, vals in samples.items():
@@ -262,6 +287,12 @@ def _server_samples(server: "SearchServer"):
                                  "requests dropped by admission control"),
             "serve_degraded_total": (st.degraded,
                                      "requests served via degrade-to-lsh"),
+            "serve_partial_total": (st.partial,
+                                    "requests served from surviving shards "
+                                    "only (coverage < 1)"),
+            "serve_worker_restarts_total": (st.worker_restarts,
+                                            "dispatch loops revived after "
+                                            "an unexpected crash"),
             "serve_errors_total": (st.errors, "failed flushes/submits"),
             "serve_deadline_misses_total": (st.deadline_misses,
                                             "results landed past deadline"),
@@ -283,6 +314,9 @@ def _server_samples(server: "SearchServer"):
                                       list(st.latency_s)),
             "serve_batch_size": ("requests per flushed batch",
                                  [float(v) for v in st.batch_sizes]),
+            "serve_coverage": ("fraction of corpus docs searched per "
+                               "flush (1.0 = full coverage)",
+                               list(st.coverage)),
         }
     for name, (v, help) in counters.items():
         yield Sample(name, "counter", help, (), float(v))
@@ -321,8 +355,9 @@ class _WorkerHandle(_BatchedAdmission):
     (the shared searcher's own submit/flush state is never raced).
     """
 
-    def __init__(self, searcher):
+    def __init__(self, searcher, on_shard_failure: Optional[str] = None):
         self._searcher = searcher
+        self._on_shard_failure = on_shard_failure
         self._admission_init()
 
     @property
@@ -331,8 +366,13 @@ class _WorkerHandle(_BatchedAdmission):
 
     def search(self, queries, topk: int = 10, *, mode: str = "exact",
                query_sizes=None):
+        kwargs = {}
+        if self._on_shard_failure is not None:
+            # only a sharded router understands the policy; a plain
+            # IndexSearcher server leaves it unset
+            kwargs["on_shard_failure"] = self._on_shard_failure
         return self._searcher.search(queries, topk, mode=mode,
-                                     query_sizes=query_sizes)
+                                     query_sizes=query_sizes, **kwargs)
 
 
 ADMISSION_POLICIES = ("none", "reject", "shed-oldest", "degrade-to-lsh")
@@ -368,11 +408,15 @@ class SearchServer:
                  admission: str = "none",
                  max_queue: Optional[int] = None,
                  deadline_budget_s: Optional[float] = None,
+                 on_shard_failure: Optional[str] = None,
                  registry=None, tracer=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if mode not in ("exact", "lsh"):
             raise ValueError(f"mode must be 'exact' or 'lsh', got {mode!r}")
+        if on_shard_failure not in (None, "fail", "partial"):
+            raise ValueError(f"on_shard_failure must be None, 'fail' or "
+                             f"'partial', got {on_shard_failure!r}")
         if admission not in ADMISSION_POLICIES:
             raise ValueError(f"admission must be one of "
                              f"{ADMISSION_POLICIES}, got {admission!r}")
@@ -396,6 +440,7 @@ class SearchServer:
         self.admission = admission
         self.max_queue = max_queue
         self.deadline_budget_s = deadline_budget_s
+        self.on_shard_failure = on_shard_failure
         self.stats = ServerStats(workers=num_workers)
         # observability: this server's counters/reservoirs export through
         # the (default: process-wide) registry -- a weakref collector, so
@@ -447,7 +492,7 @@ class SearchServer:
             raise RuntimeError("server already started")
         self._stopping = False
         self.stats.t_start = time.monotonic()
-        self._handles = [_WorkerHandle(self.searcher)
+        self._handles = [_WorkerHandle(self.searcher, self.on_shard_failure)
                          for _ in range(self.num_workers)]
         self._threads = [
             threading.Thread(target=self._dispatch_loop, args=(i,),
@@ -627,12 +672,37 @@ class SearchServer:
     def _dispatch_loop(self, wi: int) -> None:
         handle = self._handles[wi]
         while True:
-            with self._cond:
-                batch, trigger = self._take_batch()
-            if batch is None:
-                return
-            if batch:
-                self._flush_batch(batch, trigger, wi, handle)
+            batch = None
+            try:
+                with self._cond:
+                    batch, trigger = self._take_batch()
+                if batch is None:
+                    return
+                if batch:
+                    self._flush_batch(batch, trigger, wi, handle)
+            except Exception as e:
+                # _flush_batch already contains the expected failure
+                # domains (bad query -> per request, flush error -> per
+                # batch); anything that still escapes must not silently
+                # kill the worker with requests queued behind it.  Fail
+                # whatever this worker was holding, swap in a fresh
+                # handle (the crashed one may hold torn admission
+                # state), and keep draining.
+                stats = self.stats
+                with stats.lock:
+                    stats.worker_restarts += 1
+                    stats.errors += 1
+                for r in (batch or ()):
+                    if r.done():
+                        continue
+                    r._resolve(None, e, outcome="error")
+                    if r.trace is not None:
+                        self.tracer.end_span(r.trace,
+                                             t1=r.t_submit + r.latency_s,
+                                             args={"outcome": "error"})
+                        r.trace = None
+                handle = _WorkerHandle(self.searcher, self.on_shard_failure)
+                self._handles[wi] = handle
 
     def _flush_batch(self, batch: List[PendingResult], trigger: str,
                      wi: int, handle: _WorkerHandle) -> None:
@@ -702,6 +772,12 @@ class SearchServer:
         dt = time.monotonic() - t0
         tracer.end_span(wf, t1=t0 + dt)
         now = time.monotonic()
+        # on_shard_failure="partial": the searcher annotated every row of
+        # this flush with the same coverage; < 1 means shards dropped out
+        cov = 1.0
+        if tickets and error is None:
+            first = next(iter(out.values()), None)
+            cov = float(getattr(first, "coverage", 1.0))
         with stats.lock:
             self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * dt
             stats.batches += 1
@@ -711,7 +787,14 @@ class SearchServer:
             stats.worker_busy_s[wi] += dt
             if degraded:
                 stats.degraded += len(tickets)
-        if tickets and not degraded and mode == "exact" and error is None:
+            if tickets and error is None:
+                stats.coverage.append(cov)
+                if cov < 1.0:
+                    stats.partial += len(tickets)
+        if cov < 1.0:
+            outcome = "partial"
+        if (tickets and not degraded and mode == "exact" and error is None
+                and cov == 1.0):   # a partial flush scanned fewer bytes
             self._update_roofline(len(tickets), dt)
         for ticket, r in tickets.items():
             r._resolve(out.get(ticket), error, outcome=outcome)

@@ -3,9 +3,13 @@
 import numpy as np
 import pytest
 
+import random
+import time
+
 from repro.data import TINY, generate
-from repro.data.pipeline import (ChunkedLoader, make_sharded_dataset,
-                                 read_shard_binary, read_shard_libsvm,
+from repro.data.pipeline import (ChunkedLoader, LoaderStats,
+                                 make_sharded_dataset, read_shard_binary,
+                                 read_shard_libsvm, read_with_retries,
                                  write_shard_binary, write_shard_libsvm,
                                  write_shards)
 
@@ -94,6 +98,68 @@ def test_read_shard_oserror_accounted(tmp_path):
         list(dead)
     assert dead.stats.io_errors == 2  # max_retries + 1 attempts
     assert dead.stats.bytes_read == 0
+
+
+def test_io_backoff_schedule_pinned(tmp_path):
+    """Fake-clock regression of the retry backoff: attempt ``i`` sleeps
+    ``min(cap, base * 2**i)`` scaled by the rng's uniform [0.5, 1.0)
+    jitter -- pinned against a replay of the same seeded rng.  No sleep
+    after the final failed attempt, and none on the straggler path."""
+    calls = {"n": 0}
+
+    def flaky(path):
+        calls["n"] += 1
+        raise OSError("down")
+
+    sleeps = []
+    stats = LoaderStats()
+    with pytest.raises(OSError):
+        read_with_retries(flaky, "p", stats, deadline=30.0, max_retries=3,
+                          backoff_base_s=0.05, backoff_cap_s=0.12,
+                          rng=random.Random(7), sleep=sleeps.append)
+    assert calls["n"] == 4 and stats.io_errors == 4
+    replay = random.Random(7)
+    want = [min(0.12, 0.05 * 2.0 ** i) * (0.5 + 0.5 * replay.random())
+            for i in range(3)]             # one sleep per retry, capped,
+    assert sleeps == want                  # none after the last failure
+
+    # stragglers retry immediately: a 0-second deadline forces retries
+    # on every (successful) read, and the sleep clock must never tick
+    sleeps.clear()
+    real = tmp_path / "shard"
+    real.write_bytes(b"x" * 16)
+    out = read_with_retries(lambda p: "ok", str(real), LoaderStats(),
+                            deadline=0.0, max_retries=2,
+                            backoff_base_s=0.05, backoff_cap_s=0.12,
+                            rng=random.Random(7), sleep=sleeps.append)
+    assert out == "ok" and sleeps == []
+
+
+def test_loader_backoff_knobs_reach_reader(tmp_path):
+    """ChunkedLoader threads its io_backoff_* knobs into the shared
+    retry helper -- the sleeps a flaky shard sees follow the loader's
+    configured base/cap, not the defaults."""
+    sets, labels = _toy_sets(20)
+    paths = write_shards(sets, labels, str(tmp_path), n_shards=1)
+    loader = ChunkedLoader(paths, chunk_size=20, prefetch=0, max_retries=2,
+                           lane_multiple=8, io_backoff_base_s=1e-4,
+                           io_backoff_cap_s=2e-4)
+    real_reader = loader._reader
+    fails = {"n": 2}
+
+    def flaky(path):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+        return real_reader(path)
+
+    loader._reader = flaky
+    t0 = time.perf_counter()
+    chunks = list(loader)
+    dt = time.perf_counter() - t0
+    assert sum(c.n for c in chunks) == 20
+    assert loader.stats.io_errors == 2
+    assert dt < 1.0                      # default base (50ms) not in play
 
 
 def test_make_sharded_dataset(tmp_path):

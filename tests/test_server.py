@@ -413,6 +413,47 @@ def test_server_stats_concurrent_snapshot(searcher):
     assert sum(snap["worker_flushes"]) == snap["batches"]
 
 
+def test_server_worker_survives_flush_crash(searcher):
+    """A worker whose flush blows up mid-storm is restarted: the dead
+    batch's handles resolve as errors (never strand), later requests
+    are served normally, and the restart is counted."""
+    n = searcher.index.n
+    rows = [np.asarray(searcher.index.words_host[i % n])
+            for i in range(24)]
+    with SearchServer(searcher, max_batch=4, max_delay_s=0.002,
+                      topk=3, num_workers=2) as srv:
+        real = srv._flush_batch
+        crashes = [2]
+
+        def flaky(batch, trigger, wi, handle):
+            if crashes[0] > 0:
+                crashes[0] -= 1
+                raise RuntimeError("injected flush crash")
+            return real(batch, trigger, wi, handle)
+
+        srv._flush_batch = flaky
+        handles = [srv.submit(r) for r in rows]
+        outcomes = []
+        for h in handles:
+            try:
+                res = h.result(timeout=60.0)
+                assert res.indices.shape == (1, 3)   # never torn
+                outcomes.append("served")
+            except RuntimeError as e:
+                assert "injected flush crash" in str(e)
+                outcomes.append("error")
+    assert all(h.done() for h in handles)            # nothing stranded
+    assert crashes[0] == 0                           # both crashes fired
+    assert outcomes.count("error") >= 1
+    assert outcomes.count("served") >= 1             # server kept serving
+    snap = srv.stats.snapshot()
+    assert snap["worker_restarts"] == 2
+    # full accounting: every row either served (counted) or errored
+    assert snap["requests"] == outcomes.count("served")
+    assert snap["requests"] + outcomes.count("error") == len(rows)
+    assert srv.stats.errors >= 2
+
+
 def test_zipfian_traffic_identical_across_worker_counts(searcher):
     """The load model is independent of the serving side: the same seed
     replays the same query ids and arrival times no matter how many
